@@ -1,0 +1,71 @@
+"""Shared benchmark plumbing: target systems, default PsA, CSV emission."""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+from typing import Any, Callable
+
+from repro.configs import ARCHS
+from repro.core.compute import (SYSTEM_1_DEVICE, SYSTEM_2_DEVICE,
+                                SYSTEM_3_DEVICE, Device)
+from repro.core.env import CosmicEnv
+from repro.core.psa import ParameterSet, paper_psa
+from repro.core.topology import system_1, system_2, system_3
+
+# search budget per DSE run; scaled by BENCH_SCALE env (default keeps the
+# whole suite minutes-scale on one CPU core)
+STEPS = int(os.environ.get("BENCH_STEPS", "400"))
+SEEDS = tuple(range(int(os.environ.get("BENCH_SEEDS", "2"))))
+
+SYSTEMS: dict[str, tuple[int, Device]] = {
+    "system1": (512, SYSTEM_1_DEVICE),
+    "system2": (1024, SYSTEM_2_DEVICE),
+    "system3": (2048, SYSTEM_3_DEVICE),
+}
+
+# Table-3 baseline stacks used as pinned defaults for single-stack DSE
+BASE_DEFAULTS = {
+    "system1": dict(sched_policy="fifo", coll_algo=("ring", "ring", "ring", "rhd"),
+                    chunks=2, multidim_coll="baseline",
+                    topology=("ring", "ring", "ring", "switch"),
+                    npus_per_dim=(4, 4, 4, 8), bw_per_dim=(200, 200, 200, 50)),
+    "system2": dict(sched_policy="fifo", coll_algo=("ring", "direct", "ring", "rhd"),
+                    chunks=2, multidim_coll="baseline",
+                    topology=("ring", "fc", "ring", "switch"),
+                    npus_per_dim=(4, 8, 4, 8), bw_per_dim=(400, 200, 150, 100)),
+    "system3": dict(sched_policy="fifo", coll_algo=("direct", "rhd", "ring", "ring"),
+                    chunks=2, multidim_coll="baseline",
+                    topology=("fc", "switch", "ring", "ring"),
+                    npus_per_dim=(8, 16, 4, 4), bw_per_dim=(450, 100, 50, 50)),
+}
+WORKLOAD_DEFAULTS = dict(dp=64, pp=1, sp=4, weight_sharded=1)
+
+
+def make_env(arch: str, system: str, *, batch: int = 1024, seq: int | None = None,
+             objective: str = "perf_per_bw", mode: str = "train") -> CosmicEnv:
+    n, dev = SYSTEMS[system]
+    spec = ARCHS[arch]
+    return CosmicEnv(spec=spec, n_npus=n, device=dev, batch=batch,
+                     seq=seq or spec.max_seq, mode=mode, objective=objective)
+
+
+def make_pset(system: str, *, stacks: set[str] | None = None, max_pp: int = 4) -> ParameterSet:
+    n, _ = SYSTEMS[system]
+    ps = paper_psa(n, max_pp=max_pp)
+    if stacks is not None:
+        defaults = {**BASE_DEFAULTS[system], **WORKLOAD_DEFAULTS}
+        ps = ps.restrict(stacks, defaults)
+    return ps
+
+
+def emit(rows: list[tuple]) -> None:
+    """name,us_per_call,derived CSV lines (the run.py contract)."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+def timed(fn: Callable[[], Any]) -> tuple[Any, float]:
+    t0 = time.time()
+    out = fn()
+    return out, (time.time() - t0) * 1e6

@@ -1,0 +1,51 @@
+"""Fig. 4: latency spread across the design space.
+
+(a) workload-only spread for GPT3-175B on System 2 (paper: 64.5x),
+(d) full-stack spread (paper: up to 103x), (e,f) GPT3-13B / ViT-Large
+workload-only, (g,h) ViT full-stack.  We sample the space uniformly and
+report max/min latency over valid points.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import STEPS, emit, make_env, make_pset, timed
+from repro.core.space import DesignSpace
+
+
+def _spread(arch: str, stacks, n_samples: int, seed: int = 0,
+            batch: int = 1024) -> tuple[float, float, float]:
+    # the paper's Fig-4 motivation measures the RAW latency spread of the
+    # space (no memory validity gate): disable the 24 GB cap here
+    env = make_env(arch, "system2", batch=batch)
+    env.capacity_gb = float("inf")
+    ds = DesignSpace(make_pset("system2", stacks=stacks))
+    rng = np.random.default_rng(seed)
+    lats = []
+    for _ in range(n_samples):
+        ev = env.step(ds.sample(rng))
+        if ev.valid:
+            lats.append(ev.latency_ms)
+    lats = np.asarray(lats)
+    return float(lats.min()), float(lats.max()), float(lats.max() / lats.min())
+
+
+def run(n_samples: int | None = None) -> list[tuple]:
+    n = n_samples or STEPS
+    rows = []
+    cases = [
+        ("fig4a_gpt3-175b_workload_only", "gpt3-175b", {"workload"}, 1024),
+        ("fig4d_gpt3-175b_full_stack", "gpt3-175b", None, 1024),
+        ("fig4e_gpt3-13b_workload_only", "gpt3-13b", {"workload"}, 1024),
+        ("fig4f_vit-large_workload_only", "vit-large", {"workload"}, 4096),
+        ("fig4g_vit-large_full_stack", "vit-large", None, 4096),
+        ("fig4h_vit-base_full_stack", "vit-base", None, 4096),
+    ]
+    for name, arch, stacks, batch in cases:
+        (lo, hi, ratio), us = timed(lambda: _spread(arch, stacks, n, batch=batch))
+        rows.append((name, us / n, f"spread={ratio:.1f}x min_ms={lo:.1f} max_ms={hi:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

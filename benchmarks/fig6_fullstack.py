@@ -1,0 +1,51 @@
+"""Fig. 6 + Fig. 7: full-stack vs single-stack DSE.
+
+For Systems 1 and 2, run COSMIC restricted to workload-only,
+collective-only, network-only, and the full stack; report best reward per
+scenario normalized to full-stack (paper: full-stack wins 1.50-48.41x on
+perf/BW-NPU and 3.94-127.17x on perf/network-cost).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SEEDS, STEPS, emit, make_env, make_pset, timed
+from repro.core.dse import run_search
+
+SCENARIOS = {
+    "workload_only": {"workload"},
+    "collective_only": {"collective"},
+    "network_only": {"network"},
+    "full_stack": None,
+}
+
+
+def run_one(system: str, objective: str, steps: int) -> dict[str, float]:
+    best: dict[str, float] = {}
+    for name, stacks in SCENARIOS.items():
+        ps = make_pset(system, stacks=stacks)
+        vals = []
+        for seed in SEEDS:
+            env = make_env("gpt3-175b", system, objective=objective)
+            vals.append(run_search(ps, env, "ga", steps=steps, seed=seed).best_reward)
+        best[name] = float(np.max(vals))
+    return best
+
+
+def run(steps: int | None = None) -> list[tuple]:
+    steps = steps or STEPS
+    rows = []
+    for fig, objective in (("fig6", "perf_per_bw"), ("fig7", "perf_per_cost")):
+        for system in ("system1", "system2"):
+            best, us = timed(lambda: run_one(system, objective, steps))
+            full = best["full_stack"]
+            gains = {k: full / max(v, 1e-30) for k, v in best.items() if k != "full_stack"}
+            lo, hi = min(gains.values()), max(gains.values())
+            detail = " ".join(f"{k}=x{v:.2f}" for k, v in gains.items())
+            rows.append((f"{fig}_{system}_{objective}", us / steps / 4,
+                         f"fullstack_gain={lo:.2f}-{hi:.2f}x {detail}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

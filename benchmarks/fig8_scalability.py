@@ -1,0 +1,41 @@
+"""Fig. 8: scalability — System 3 (2,048 NPUs), ViT-Large + GPT3-175B,
+global batch 1,024..16,384; workload-only vs full-stack (paper: full-stack
+wins 1.71-3.75x on ViT-Large, 4.19-5.05x on GPT3-175B)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SEEDS, STEPS, emit, make_env, make_pset, timed
+from repro.core.dse import run_search
+
+BATCHES = (1024, 2048, 4096, 8192, 16384)
+
+
+def run_one(arch: str, batch: int, steps: int) -> tuple[float, float]:
+    full_ps = make_pset("system3")
+    wl_ps = make_pset("system3", stacks={"workload"})
+    full = max(run_search(full_ps, make_env(arch, "system3", batch=batch),
+                          "ga", steps=steps, seed=s).best_reward for s in SEEDS)
+    wl = max(run_search(wl_ps, make_env(arch, "system3", batch=batch),
+                        "ga", steps=steps, seed=s).best_reward for s in SEEDS)
+    return full, wl
+
+
+def run(steps: int | None = None) -> list[tuple]:
+    steps = steps or max(STEPS // 2, 100)
+    rows = []
+    for arch in ("vit-large", "gpt3-175b"):
+        gains = []
+        t_us = 0.0
+        for batch in BATCHES:
+            (full, wl), us = timed(lambda: run_one(arch, batch, steps))
+            t_us += us
+            gains.append(full / max(wl, 1e-30))
+        detail = " ".join(f"b{b}=x{g:.2f}" for b, g in zip(BATCHES, gains))
+        rows.append((f"fig8_{arch}_system3", t_us / (len(BATCHES) * steps * 2),
+                     f"fullstack_vs_workload {detail}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,156 @@
+"""§Roofline: three-term roofline per (arch x shape) from the dry-run.
+
+    compute    = HLO_FLOPs / (chips * peak)            [197 TFLOP/s bf16]
+    memory     = HLO_bytes / (chips * HBM bw)          [819 GB/s]
+    collective = wire_bytes / (chips * link bw)        [~50 GB/s/link ICI]
+
+HLO totals come from the loop-aware analyzer (per-device, execution-
+weighted); wire bytes apply the per-kind algorithm factor to each
+collective's payload using its replica-group size g:
+    all-reduce 2(g-1)/g, all-gather/reduce-scatter/all-to-all (g-1)/g,
+    collective-permute 1.
+
+Also reported per cell: MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D
+(inference), the useful-compute ratio MODEL_FLOPS/HLO_FLOPs, the dominant
+term, and an upper-bound utilization proxy
+    util = ideal_time / max(terms)   (perfect-overlap roofline fraction).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+from pathlib import Path
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s
+LINK_BW = 50e9           # B/s per ICI link
+
+_WIRE_FACTOR = {
+    "all-reduce": lambda g: 2.0 * (g - 1) / g,
+    "all-gather": lambda g: (g - 1) / g,
+    "reduce-scatter": lambda g: (g - 1) / g,
+    "all-to-all": lambda g: (g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+    "collective-broadcast": lambda g: (g - 1) / g,
+}
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    mesh: str
+    tag: str
+    kind: str
+    status: str
+    chips: int = 0
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    model_flops: float = 0.0
+    hlo_flops: float = 0.0
+    hlo_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    mem_gib: float = 0.0
+    hlo_bytes_raw: float = 0.0
+    knobs: dict | None = None
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def ideal_s(self) -> float:
+        return self.model_flops / (self.chips * PEAK_FLOPS) if self.chips else 0.0
+
+    @property
+    def util(self) -> float:
+        m = max(self.compute_s, self.memory_s, self.collective_s)
+        return self.ideal_s / m if m else 0.0
+
+    @property
+    def flops_ratio(self) -> float:
+        return (self.model_flops / self.chips / self.hlo_flops
+                if self.hlo_flops and self.chips else 0.0)
+
+
+def wire_bytes_per_device(hlo: dict) -> float:
+    total = 0.0
+    for key, b in hlo.get("collective_by_group", {}).items():
+        kind, g = key.rsplit("@", 1)
+        g = max(int(g), 1)
+        f = _WIRE_FACTOR.get(kind, lambda g: 1.0)(g) if g > 1 else 0.0
+        total += b * f
+    return total
+
+
+def load_cell(path: str | Path) -> Cell:
+    r = json.loads(Path(path).read_text())
+    c = Cell(arch=r["arch"], shape=r["shape"], mesh=r["mesh"], tag=r.get("tag", ""),
+             kind=r.get("kind", ""), status=r["status"], knobs=r.get("knobs"))
+    if r["status"] != "ok":
+        return c
+    c.chips = r["n_chips"]
+    c.hlo_flops = r["hlo"]["flops_per_device"]
+    # fusion-optimistic bytes when available (TPU-like); raw boundary bytes
+    # otherwise (older records)
+    c.hlo_bytes = r["hlo"].get("fused_bytes_per_device") or r["hlo"]["bytes_per_device"]
+    c.hlo_bytes_raw = r["hlo"]["bytes_per_device"]
+    c.wire_bytes = wire_bytes_per_device(r["hlo"])
+    c.model_flops = r["model_flops"]
+    c.mem_gib = r["memory"]["peak_bytes_per_device"] / 2**30
+    c.compute_s = c.hlo_flops / PEAK_FLOPS
+    c.memory_s = c.hlo_bytes / HBM_BW
+    c.collective_s = c.wire_bytes / LINK_BW
+    return c
+
+
+def load_all(out_dir: str = "results/dryrun", mesh: str = "pod",
+             tag: str = "") -> list[Cell]:
+    cells = []
+    for f in sorted(glob.glob(f"{out_dir}/*__{mesh}{('__' + tag) if tag else ''}.json")):
+        stem = Path(f).stem
+        parts = stem.split("__")
+        if not tag and len(parts) > 3:
+            continue  # skip tagged (hillclimb) variants in the baseline table
+        cells.append(load_cell(f))
+    return cells
+
+
+def markdown_table(cells: list[Cell]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| model/HLO flops | util | mem GiB |\n|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for c in cells:
+        if c.status != "ok":
+            lines.append(f"| {c.arch} | {c.shape} | - | - | - | {c.status} | - | - | - |")
+            continue
+        lines.append(
+            f"| {c.arch} | {c.shape} | {c.compute_s:.3e} | {c.memory_s:.3e} "
+            f"| {c.collective_s:.3e} | **{c.dominant}** | {c.flops_ratio:.2f} "
+            f"| {c.util:.2f} | {c.mem_gib:.1f} |")
+    return "\n".join(lines)
+
+
+def run(out_dir: str = "results/dryrun") -> list[tuple]:
+    cells = load_all(out_dir)
+    rows = []
+    for c in cells:
+        if c.status != "ok":
+            rows.append((f"roofline_{c.arch}_{c.shape}", 0.0, c.status))
+            continue
+        rows.append((
+            f"roofline_{c.arch}_{c.shape}", 0.0,
+            f"compute={c.compute_s:.3e}s memory={c.memory_s:.3e}s "
+            f"collective={c.collective_s:.3e}s dominant={c.dominant} "
+            f"flops_ratio={c.flops_ratio:.2f} util={c.util:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

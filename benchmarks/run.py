@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig6,roofline] [--steps N]
+
+Prints ``name,us_per_call,derived`` CSV (us_per_call = mean simulator/DSE
+step cost where applicable).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma-separated module list")
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (calibration, fig4_spread, fig6_fullstack,
+                            fig8_scalability, fig10_agents, roofline,
+                            table6_codesign)
+    from benchmarks.common import emit
+
+    modules = {
+        "fig4": lambda: fig4_spread.run(args.steps),
+        "fig6": lambda: fig6_fullstack.run(args.steps),
+        "fig8": lambda: fig8_scalability.run(args.steps),
+        "fig10": lambda: fig10_agents.run(args.steps),
+        "table6": lambda: table6_codesign.run(args.steps),
+        "roofline": lambda: roofline.run(),
+        "calibration": lambda: calibration.run(),
+    }
+    only = [m.strip() for m in args.only.split(",") if m.strip()]
+    todo = only or list(modules)
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in todo:
+        if name not in modules:
+            print(f"unknown benchmark {name!r}; known: {sorted(modules)}", file=sys.stderr)
+            raise SystemExit(2)
+        emit(modules[name]())
+    print(f"# total wall: {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Table 5/6: co-design use cases.
+
+Table 5: full-stack DSE for GPT3-175B on System 2 under both objectives
+(the two discovered configurations differ in the network stack).
+
+Table 6 Expr 1: workload+network co-design (collective stack fixed) over an
+ensemble of all four paper workloads (multi-model).
+Table 6 Expr 2: collective+network co-design (workload fixed) for GPT3-175B
+inference — chat (long prefill) and QA (short) — where latency-optimized
+collectives should win.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (BASE_DEFAULTS, SEEDS, STEPS, WORKLOAD_DEFAULTS,
+                               emit, make_env, make_pset, timed)
+from repro.core.dse import run_search
+from repro.core.env import CosmicEnv
+from repro.core.psa import paper_psa
+
+
+def _fmt(cfg: dict) -> str:
+    keys = ("dp", "pp", "sp", "weight_sharded", "sched_policy", "chunks",
+            "multidim_coll", "coll_algo", "topology", "npus_per_dim")
+    return " ".join(f"{k}={cfg[k]}" for k in keys if k in cfg)
+
+
+def table5(steps: int) -> list[tuple]:
+    rows = []
+    for objective in ("perf_per_bw", "perf_per_cost"):
+        ps = make_pset("system2")
+        res = max((run_search(ps, make_env("gpt3-175b", "system2", objective=objective),
+                              "ga", steps=steps, seed=s) for s in SEEDS),
+                  key=lambda r: r.best_reward)
+        rows.append((f"table5_{objective}", 0.0,
+                     f"reward={res.best_reward:.3e} | {_fmt(res.best_config)}"))
+    return rows
+
+
+def table6_expr1(steps: int) -> list[tuple]:
+    """multi-model: optimize workload+network jointly, sum of rewards over
+    the four workloads; collective stack pinned."""
+    ps = make_pset("system2", stacks={"workload", "network"})
+    envs = [make_env(a, "system2") for a in
+            ("gpt3-175b", "gpt3-13b", "vit-base", "vit-large")]
+
+    from repro.core.agents import make_agent
+    from repro.core.space import DesignSpace
+    space = DesignSpace(ps)
+    agent = make_agent("ga", space, seed=0)
+    best_r, best_cfg = -1.0, None
+    for _ in range(steps):
+        cfg = agent.propose()
+        r = float(np.mean([e.step(cfg).reward for e in envs]))
+        agent.observe(cfg, r)
+        if r > best_r:
+            best_r, best_cfg = r, cfg
+    return [("table6_expr1_multimodel", 0.0,
+             f"reward={best_r:.3e} | {_fmt(best_cfg)}")]
+
+
+def table6_expr2(steps: int) -> list[tuple]:
+    rows = []
+    for name, seq in (("chat", 2048), ("qa", 512)):
+        ps = make_pset("system2", stacks={"collective", "network"})
+        env = make_env("gpt3-175b", "system2", batch=64, seq=seq, mode="serve")
+        res = max((run_search(ps, env, "ga", steps=steps, seed=s) for s in SEEDS),
+                  key=lambda r: r.best_reward)
+        cfg = res.best_config
+        lat_opt = sum(a in ("direct", "rhd", "dbt") for a in cfg["coll_algo"])
+        rows.append((f"table6_expr2_{name}", 0.0,
+                     f"latency_optimized_algos={lat_opt}/4 | {_fmt(cfg)}"))
+    return rows
+
+
+def run(steps: int | None = None) -> list[tuple]:
+    steps = steps or STEPS
+    out, us = timed(lambda: table5(steps) + table6_expr1(steps) + table6_expr2(steps))
+    return [(n, us / (5 * steps), d) for n, _, d in out]
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,53 @@
+"""The paper's headline experiment, runnable at desk scale:
+full-stack vs single-stack DSE for GPT3-175B (Fig. 6), with all four agents
+compared (Fig. 10).
+
+    PYTHONPATH=src python examples/dse_full_stack.py [--steps 600]
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))  # for benchmarks/
+
+from benchmarks.common import BASE_DEFAULTS, WORKLOAD_DEFAULTS, make_env, make_pset
+from repro.core.dse import run_search
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=600)
+    ap.add_argument("--system", default="system2", choices=["system1", "system2", "system3"])
+    args = ap.parse_args()
+
+    scenarios = {
+        "workload-only": {"workload"},
+        "collective-only": {"collective"},
+        "network-only": {"network"},
+        "full-stack": None,
+    }
+    print(f"== single-stack vs full-stack (GPT3-175B, {args.system}, GA) ==")
+    best = {}
+    for name, stacks in scenarios.items():
+        ps = make_pset(args.system, stacks=stacks)
+        res = run_search(ps, make_env("gpt3-175b", args.system), "ga",
+                         steps=args.steps, seed=0)
+        best[name] = res
+        print(f"{name:16s} reward={res.best_reward:.3e} "
+              f"latency={res.best_latency_ms:9.1f} ms steps_to_peak={res.steps_to_peak}")
+    full = best["full-stack"].best_reward
+    for name in scenarios:
+        if name != "full-stack":
+            print(f"full-stack vs {name}: x{full / max(best[name].best_reward, 1e-30):.2f}")
+
+    print(f"\n== agent comparison (full stack, {args.steps} steps) ==")
+    for agent in ("rw", "ga", "aco", "bo"):
+        steps = min(args.steps, 200) if agent == "bo" else args.steps
+        res = run_search(make_pset(args.system), make_env("gpt3-175b", args.system),
+                         agent, steps=steps, seed=0)
+        print(f"{agent:4s} best={res.best_reward:.3e} steps_to_peak={res.steps_to_peak} "
+              f"invalid_rate={res.invalid_rate:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Config module for --arch; exact spec lives in registry."""
+from repro.configs.registry import JAMBA_52B as SPEC
+
+__all__ = ["SPEC"]

@@ -1,0 +1,4 @@
+"""Config module for --arch; exact spec lives in registry."""
+from repro.configs.registry import MUSICGEN_MEDIUM as SPEC
+
+__all__ = ["SPEC"]

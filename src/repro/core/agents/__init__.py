@@ -1,0 +1,8 @@
+from repro.core.agents.base import Agent, make_agent
+from repro.core.agents.random_walk import RandomWalker
+from repro.core.agents.genetic import GeneticAlgorithm
+from repro.core.agents.aco import AntColony
+from repro.core.agents.bayesian import BayesianOptimizer
+
+__all__ = ["Agent", "make_agent", "RandomWalker", "GeneticAlgorithm",
+           "AntColony", "BayesianOptimizer"]

@@ -1,0 +1,39 @@
+"""Agent interface.  The PSS hands every agent the same synthesized
+DesignSpace — agents are domain-blind by construction (the paper's
+'separation of concerns' principle)."""
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+from repro.core.space import DesignSpace
+
+
+class Agent:
+    name = "agent"
+
+    def __init__(self, space: DesignSpace, seed: int = 0):
+        self.space = space
+        self.rng = np.random.default_rng(seed)
+        self.best_reward = -np.inf
+        self.best_config: dict[str, Any] | None = None
+
+    def propose(self) -> dict[str, Any]:
+        raise NotImplementedError
+
+    def observe(self, config: dict[str, Any], reward: float) -> None:
+        if reward > self.best_reward:
+            self.best_reward = reward
+            self.best_config = config
+
+
+def make_agent(kind: str, space: DesignSpace, seed: int = 0, **hyper) -> Agent:
+    from repro.core.agents.aco import AntColony
+    from repro.core.agents.bayesian import BayesianOptimizer
+    from repro.core.agents.genetic import GeneticAlgorithm
+    from repro.core.agents.random_walk import RandomWalker
+
+    kinds = {"rw": RandomWalker, "ga": GeneticAlgorithm,
+             "aco": AntColony, "bo": BayesianOptimizer}
+    return kinds[kind](space, seed=seed, **hyper)

@@ -1,0 +1,141 @@
+"""Collective communication cost models: {Ring, Direct, RHD, DBT} x
+{ring, switch, fc} x {reduce-scatter, all-gather, all-reduce, all-to-all},
+with chunked pipelining and BlueConnect multi-dimensional decomposition.
+
+alpha-beta form: T = steps * alpha + wire_bytes / effective_bw, where
+effective_bw folds in (i) how many of the NPU's links the algorithm can
+drive concurrently on the given topology and (ii) congestion when the
+algorithm's traffic pattern doesn't match the physical links (e.g. Direct
+on a ring incurs multi-hop forwarding).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Sequence
+
+from repro.core.topology import Network, TopoDim
+
+ALGOS = ("ring", "direct", "rhd", "dbt")
+COLL_KINDS = ("all_reduce", "all_gather", "reduce_scatter", "all_to_all")
+
+
+def _steps(algo: str, kind: str, n: int) -> float:
+    """Latency term: serialized communication rounds."""
+    if n <= 1:
+        return 0.0
+    lg = math.ceil(math.log2(n))
+    if algo == "ring":
+        per_pass = n - 1
+    elif algo == "direct":
+        per_pass = 1.0
+    else:  # rhd, dbt
+        per_pass = lg
+    if kind == "all_reduce":
+        return 2.0 * per_pass   # reduce-scatter pass + all-gather pass
+    if kind == "all_to_all":
+        return 1.0 if algo == "direct" else per_pass
+    return float(per_pass)      # AG / RS: one pass
+
+
+def _wire_bytes(kind: str, n: int, size: float) -> float:
+    """Bytes each NPU must move through its injection port (bandwidth-optimal
+    lower bound): AR = 2M(n-1)/n, AG/RS/A2A = M(n-1)/n."""
+    if n <= 1:
+        return 0.0
+    frac = (n - 1) / n
+    return (2.0 if kind == "all_reduce" else 1.0) * size * frac
+
+
+def _parallel_links(algo: str, topo_kind: str, n: int) -> float:
+    """How many links per NPU the algorithm drives concurrently."""
+    if topo_kind == "ring":
+        # ring topology: 2 neighbour links; ring algo streams through 1 tx
+        # (bidirectional rings can split ~2x, halved by turnaround overheads)
+        return {"ring": 1.0, "direct": 1.0, "rhd": 1.0, "dbt": 2.0}[algo]
+    if topo_kind == "switch":
+        return 1.0  # NIC-bound through the switch for every algorithm
+    # fully connected: direct/A2A-style patterns drive all n-1 links
+    return {"ring": 1.0, "direct": float(n - 1), "rhd": 1.0, "dbt": 2.0}[algo]
+
+
+def _congestion(algo: str, topo_kind: str, n: int) -> float:
+    """Multiplier >= 1 when traffic must be forwarded over links it doesn't
+    own (pattern/topology mismatch)."""
+    if n <= 2:
+        return 1.0
+    if topo_kind == "ring":
+        if algo == "direct":
+            return n / 4.0            # mean hop distance on a bidirectional ring
+        if algo == "rhd":
+            # exchange at distance 2^i: sum of hops / passes
+            return max(1.0, (n / 2.0) / math.ceil(math.log2(n)))
+        if algo == "dbt":
+            return max(1.0, n / (2.0 * math.ceil(math.log2(n))))
+    if topo_kind == "switch":
+        return 1.0                    # non-blocking
+    return 1.0                        # fc: every pair has a wire
+
+
+def collective_time_us(kind: str, size_bytes: float, dim: TopoDim, algo: str,
+                       chunks: int = 1) -> float:
+    """Time for one collective of `size_bytes` within one network dim.
+
+    Chunking trades bandwidth efficiency for latency/pipelinability: the
+    latency term pays per chunk; the bandwidth term is unchanged (chunks are
+    serialized within a single dim — the pipelining win shows up across dims
+    in `multidim_collective_time_us`)."""
+    n = dim.npus
+    if n <= 1 or size_bytes <= 0:
+        return 0.0
+    steps = _steps(algo, kind, n) * max(chunks, 1)
+    wire = _wire_bytes(kind, n, size_bytes)
+    eff_bw = dim.bw * _parallel_links(algo, dim.kind, n) / _congestion(algo, dim.kind, n)
+    return steps * dim.latency_us + (wire / eff_bw) * 1e-3  # bytes/(GB/s) -> us
+    # (1 byte / 1 GB/s = 1e-9 s = 1e-3 us)
+
+
+def multidim_collective_time_us(kind: str, size_bytes: float, net: Network,
+                                algos: Sequence[str], chunks: int = 1,
+                                mode: str = "baseline",
+                                dims: Sequence[int] | None = None) -> float:
+    """A collective spanning several mesh dimensions.
+
+    baseline:    hierarchical reduce-scatter up the dims then all-gather back
+                 down (sizes shrink by the group size at each hop); chunks
+                 pipeline across the per-dim phases.
+    blueconnect: decompose the collective into per-dim schedules running
+                 concurrently on disjoint chunks (Cho et al., MLSys'19) —
+                 total time approaches the slowest dim instead of the sum.
+    """
+    idx = list(range(len(net.dims))) if dims is None else list(dims)
+    idx = [i for i in idx if net.dims[i].npus > 1]
+    if not idx or size_bytes <= 0:
+        return 0.0
+    if len(idx) == 1:
+        return collective_time_us(kind, size_bytes, net.dims[idx[0]], algos[idx[0]], chunks)
+
+    if kind == "all_to_all":
+        # dimension-ordered routing: each dim moves the full payload once
+        phases = [collective_time_us(kind, size_bytes, net.dims[i], algos[i], chunks)
+                  for i in idx]
+    else:
+        # RS up / AG down with shrinking payloads
+        phases = []
+        scale = 1.0
+        for i in idx:
+            d = net.dims[i]
+            if kind == "all_reduce":
+                phases.append(
+                    collective_time_us("reduce_scatter", size_bytes * scale, d, algos[i], chunks)
+                    + collective_time_us("all_gather", size_bytes * scale, d, algos[i], chunks))
+            else:
+                phases.append(collective_time_us(kind, size_bytes * scale, d, algos[i], chunks))
+            scale /= d.npus
+
+    c = max(chunks, 1)
+    if mode == "blueconnect":
+        # concurrent per-dim schedules on disjoint chunk shards
+        return max(phases) + (sum(phases) - max(phases)) / c
+    # hierarchical with chunk pipelining between consecutive phases
+    return sum(p / c for p in phases) + (c - 1) / c * max(phases)

@@ -1,0 +1,64 @@
+"""Design-space-exploration driver: agent x environment loop with
+convergence bookkeeping (reward-vs-step curves, steps-to-peak — the data
+behind the paper's Fig. 9/10)."""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+from repro.core.agents import make_agent
+from repro.core.env import CosmicEnv
+from repro.core.psa import ParameterSet
+from repro.core.space import DesignSpace
+
+
+@dataclass
+class SearchResult:
+    agent: str
+    steps: int
+    best_reward: float
+    best_config: dict[str, Any] | None
+    best_latency_ms: float
+    steps_to_peak: int
+    reward_curve: list[float]
+    invalid_rate: float
+    wall_s: float
+
+    def summary(self) -> dict[str, Any]:
+        return {
+            "agent": self.agent, "steps": self.steps,
+            "best_reward": self.best_reward,
+            "best_latency_ms": self.best_latency_ms,
+            "steps_to_peak": self.steps_to_peak,
+            "invalid_rate": round(self.invalid_rate, 4),
+            "wall_s": round(self.wall_s, 2),
+        }
+
+
+def run_search(pset: ParameterSet, env: CosmicEnv, agent_kind: str = "ga",
+               steps: int = 500, seed: int = 0, **agent_hyper) -> SearchResult:
+    space = DesignSpace(pset)
+    agent = make_agent(agent_kind, space, seed=seed, **agent_hyper)
+    t0 = time.time()
+    curve: list[float] = []
+    best, best_step, best_lat = -np.inf, 0, float("inf")
+    best_cfg = None
+    n_invalid = 0
+    for i in range(steps):
+        cfg = agent.propose()
+        ev = env.step(cfg)
+        agent.observe(cfg, ev.reward)
+        n_invalid += not ev.valid
+        if ev.reward > best:
+            best, best_step, best_cfg, best_lat = ev.reward, i, cfg, ev.latency_ms
+        curve.append(best)
+    return SearchResult(
+        agent=agent_kind, steps=steps, best_reward=float(best),
+        best_config=best_cfg, best_latency_ms=float(best_lat),
+        steps_to_peak=best_step, reward_curve=curve,
+        invalid_rate=n_invalid / max(steps, 1), wall_s=time.time() - t0,
+    )

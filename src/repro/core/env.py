@@ -1,0 +1,70 @@
+"""CosmicEnv: the ArchGym-style environment wrapping the simulator.
+
+An agent submits a PsA configuration; the environment materializes the
+(workload, collective, network, compute) stacks, runs the WTG + simulator,
+and returns the reward.  Fixed parameters (single-stack baselines) are
+handled upstream by ``ParameterSet.restrict`` — the env is stack-agnostic.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+from repro.configs.base import ArchSpec
+from repro.core.compute import Device
+from repro.core.rewards import Evaluation, evaluate
+from repro.core.simulator import SystemConfig
+from repro.core.topology import Network, build_network
+from repro.core.workload import Parallelism
+
+
+@dataclass
+class StepRecord:
+    step: int
+    config: dict[str, Any]
+    reward: float
+    latency_ms: float
+    valid: bool
+
+
+@dataclass
+class CosmicEnv:
+    spec: ArchSpec
+    n_npus: int
+    device: Device
+    batch: int
+    seq: int
+    mode: str = "train"
+    objective: str = "perf_per_bw"
+    capacity_gb: float = 24.0
+    fixed_network: Network | None = None   # for workload/collective-only DSE
+    history: list[StepRecord] = field(default_factory=list)
+
+    def _network(self, config: dict[str, Any]) -> Network:
+        if self.fixed_network is not None and "topology" not in config:
+            return self.fixed_network
+        return build_network(config["topology"], config["npus_per_dim"],
+                             config["bw_per_dim"])
+
+    def step(self, config: dict[str, Any]) -> Evaluation:
+        par = Parallelism(self.n_npus, config["dp"], config["sp"], config["pp"],
+                          bool(config["weight_sharded"]))
+        net = self._network(config)
+        sys_cfg = SystemConfig(
+            network=net, device=self.device,
+            coll_algo=tuple(config["coll_algo"]),
+            chunks=int(config["chunks"]),
+            sched_policy=config["sched_policy"],
+            multidim_coll=config["multidim_coll"],
+        )
+        ev = evaluate(self.spec, par, sys_cfg, batch=self.batch, seq=self.seq,
+                      mode=self.mode, objective=self.objective,
+                      capacity_gb=self.capacity_gb)
+        self.history.append(StepRecord(len(self.history), config, ev.reward,
+                                       ev.latency_ms, ev.valid))
+        return ev
+
+    def best(self) -> StepRecord | None:
+        valid = [r for r in self.history if r.valid]
+        return max(valid, key=lambda r: r.reward) if valid else None

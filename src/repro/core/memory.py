@@ -1,0 +1,61 @@
+"""Per-NPU memory-footprint model — the validity gate of Section 5.4
+("any parallelization strategy resulting in a memory footprint exceeding
+24 GB per NPU is considered invalid and discarded")."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ArchSpec
+from repro.core.workload import Parallelism
+
+BYTES_PARAM = 2            # bf16 weights
+BYTES_OPT = 12             # fp32 master + Adam m/v
+BYTES_ACT = 2
+
+
+@dataclass(frozen=True)
+class Footprint:
+    params_gb: float
+    optimizer_gb: float
+    activations_gb: float
+    kv_cache_gb: float
+
+    @property
+    def total_gb(self) -> float:
+        return self.params_gb + self.optimizer_gb + self.activations_gb + self.kv_cache_gb
+
+
+def footprint(spec: ArchSpec, par: Parallelism, *, batch: int, seq: int,
+              mode: str = "train", act_factor: float = 4.0,
+              remat: bool = True, microbatches: int = 8) -> Footprint:
+    p_total = spec.param_count()
+    tp = par.tp
+    shard = tp * par.pp * (par.dp if par.weight_sharded else 1)
+    params = p_total * BYTES_PARAM / shard
+    optimizer = p_total * BYTES_OPT / (tp * par.pp * par.dp) if mode == "train" else 0.0
+    if not par.weight_sharded and mode == "train":
+        optimizer = p_total * BYTES_OPT / (tp * par.pp)
+
+    b = batch / par.dp / (microbatches if mode == "train" else 1)
+    s = seq / par.sp
+    layers_per_stage = max(1, spec.n_layers // par.pp)
+    per_layer = b * s * spec.d_model * BYTES_ACT
+    if mode == "train":
+        # remat keeps ~the residual stream per layer; otherwise act_factor
+        # intermediate tensors per layer survive to the backward pass
+        acts = per_layer * layers_per_stage * (1.5 if remat else act_factor)
+    else:
+        acts = per_layer * 2
+
+    kv = 0.0
+    if mode != "train":
+        hd = spec.resolved_head_dim
+        n_attn = sum(1 for ld in spec.layer_defs() if ld.mixer.startswith("attn"))
+        kv = n_attn * b * seq * spec.n_kv_heads * hd * 2 * BYTES_ACT / tp
+
+    return Footprint(params / 1e9, optimizer / 1e9, acts / 1e9, kv / 1e9)
+
+
+def fits(spec: ArchSpec, par: Parallelism, *, batch: int, seq: int,
+         capacity_gb: float = 24.0, mode: str = "train") -> bool:
+    return footprint(spec, par, batch=batch, seq=seq, mode=mode).total_gb <= capacity_gb

@@ -1,0 +1,86 @@
+"""Optimization objectives (paper Section 5.4).
+
+Both rewards regularize raw ML latency by a network-resource denominator so
+the agent can't just buy infinite bandwidth:
+
+  reward_bw   = 1 / sqrt((Latency * sum(BW per dim) - 1)^2)
+  reward_cost = 1 / sqrt((Latency * NetworkCost    - 1)^2)
+
+(the paper's minus-one offset avoids division blow-ups on degenerate
+configs).  A memory footprint above the capacity gate makes the design
+invalid: reward 0.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable
+
+from repro.configs.base import ArchSpec
+from repro.core.memory import footprint
+from repro.core.simulator import SimResult, SystemConfig, simulate
+from repro.core.topology import Network
+from repro.core.workload import Parallelism, Trace, generate_trace
+
+
+@dataclass
+class Evaluation:
+    reward: float
+    latency_ms: float
+    valid: bool
+    detail: dict[str, Any]
+
+
+def reward_perf_per_bw(latency_ms: float, net: Network) -> float:
+    x = latency_ms * net.bw_per_npu() - 1.0
+    return 1.0 / math.sqrt(x * x + 1e-12)
+
+
+def reward_perf_per_cost(latency_ms: float, net: Network) -> float:
+    x = latency_ms * (net.dollar_cost() / 1e6) - 1.0
+    return 1.0 / math.sqrt(x * x + 1e-12)
+
+
+def reward_latency(latency_ms: float, net: Network) -> float:
+    return 1.0 / max(latency_ms, 1e-9)
+
+
+REWARDS: dict[str, Callable[[float, Network], float]] = {
+    "perf_per_bw": reward_perf_per_bw,
+    "perf_per_cost": reward_perf_per_cost,
+    "latency": reward_latency,
+}
+
+
+def evaluate(spec: ArchSpec, par: Parallelism, cfg: SystemConfig, *,
+             batch: int, seq: int, mode: str = "train",
+             objective: str = "perf_per_bw",
+             capacity_gb: float = 24.0, decode_tokens: int = 64) -> Evaluation:
+    """Full paper pipeline: WTG -> simulate -> reward (+ memory gate)."""
+    if not par.valid():
+        return Evaluation(0.0, float("inf"), False, {"why": "parallelization invalid"})
+    fp = footprint(spec, par, batch=batch, seq=seq, mode=mode)
+    if fp.total_gb > capacity_gb:
+        return Evaluation(0.0, float("inf"), False,
+                          {"why": f"memory {fp.total_gb:.1f}GB > {capacity_gb}GB"})
+    if mode == "serve":
+        # prefill the prompt once + decode `decode_tokens` new tokens
+        pre = simulate(generate_trace(spec, par, batch=batch, seq=seq,
+                                      mode="inference"), cfg, par)
+        dec = simulate(generate_trace(spec, par, batch=batch, seq=seq,
+                                      mode="decode"), cfg, par)
+        latency_ms = pre.latency_ms + decode_tokens * dec.latency_ms
+        r = REWARDS[objective](latency_ms, cfg.network)
+        return Evaluation(r, latency_ms, True, {
+            "footprint_gb": fp.total_gb,
+            "prefill_ms": pre.latency_ms, "decode_ms": dec.latency_ms,
+        })
+    trace = generate_trace(spec, par, batch=batch, seq=seq, mode=mode)
+    res = simulate(trace, cfg, par)
+    r = REWARDS[objective](res.latency_ms, cfg.network)
+    return Evaluation(r, res.latency_ms, True, {
+        "footprint_gb": fp.total_gb,
+        "exposed_comm_us": res.exposed_comm_us,
+        "compute_busy_us": res.compute_busy_us,
+        "comm_busy_us": res.comm_busy_us,
+    })

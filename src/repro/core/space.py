@@ -1,0 +1,222 @@
+"""Parameter Set Scheduler (PSS): PsA schema -> agent-ready design space.
+
+The paper's PSS "automatically establishes the abstraction layer between
+agents and the design space" (Section 4.3): it synthesizes the action space
+(one categorical gene per scalar slot), encodes/decodes configurations,
+samples valid points under the declared constraints, and repairs invalid
+proposals — so agents never need domain knowledge and experts never touch
+agent internals.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Iterable, Sequence
+
+import numpy as np
+
+from repro.core.psa import Constraint, Parameter, ParameterSet
+
+
+@dataclass(frozen=True)
+class Gene:
+    """One scalar slot of the action space."""
+    slot: str          # e.g. 'dp' or 'coll_algo[2]'
+    param: str         # owning parameter name
+    dim: int           # slot index within a multidim parameter
+    choices: tuple
+
+
+class DesignSpace:
+    """The synthesized action space for one ParameterSet."""
+
+    def __init__(self, pset: ParameterSet):
+        self.pset = pset
+        self.genes: list[Gene] = []
+        for p in pset.params:
+            if p.name in pset.fixed:
+                continue
+            for d in range(p.ndim):
+                self.genes.append(Gene(p.slots[d], p.name, d, p.choices))
+        self._index = {g.slot: i for i, g in enumerate(self.genes)}
+
+    # -- config <-> vector ----------------------------------------------
+    def n_genes(self) -> int:
+        return len(self.genes)
+
+    def encode(self, config: dict[str, Any]) -> np.ndarray:
+        """config -> integer index vector (one index per gene)."""
+        vec = np.zeros(len(self.genes), dtype=np.int64)
+        for i, g in enumerate(self.genes):
+            val = config[g.param] if g.dim == 0 and self.pset.by_name(g.param).ndim == 1 \
+                else config[g.param][g.dim]
+            vec[i] = g.choices.index(val)
+        return vec
+
+    def decode(self, vec: Sequence[int]) -> dict[str, Any]:
+        config: dict[str, Any] = dict(self.pset.fixed)
+        tmp: dict[str, list] = {}
+        for i, g in enumerate(self.genes):
+            val = g.choices[int(vec[i]) % len(g.choices)]
+            p = self.pset.by_name(g.param)
+            if p.ndim == 1:
+                config[g.param] = val
+            else:
+                tmp.setdefault(g.param, [None] * p.ndim)[g.dim] = val
+        for k, v in tmp.items():
+            config[k] = tuple(v)
+        return config
+
+    def normalize(self, vec: Sequence[int]) -> np.ndarray:
+        """index vector -> [0,1]^n floats (for BO surrogates)."""
+        out = np.zeros(len(self.genes))
+        for i, g in enumerate(self.genes):
+            out[i] = vec[i] / max(len(g.choices) - 1, 1)
+        return out
+
+    # -- validity ----------------------------------------------------------
+    def _slot_value(self, config: dict[str, Any], slot: str):
+        if "[" in slot:
+            base, idx = slot[:-1].split("[")
+            return config[base][int(idx)]
+        return config[slot]
+
+    def is_valid(self, config: dict[str, Any]) -> bool:
+        for c in self.pset.constraints:
+            if not self._check(config, c):
+                return False
+        return True
+
+    def violations(self, config: dict[str, Any]) -> list[str]:
+        return [c.describe() for c in self.pset.constraints if not self._check(config, c)]
+
+    def _check(self, config: dict[str, Any], c: Constraint) -> bool:
+        if c.kind == "predicate":
+            return bool(c.fn(config))
+        slots = self.pset.expand_constraint_params(c)
+        prod = 1
+        for s in slots:
+            prod *= self._slot_value(config, s)
+        target = config[c.target] if isinstance(c.target, str) else c.target
+        if c.kind == "product_eq":
+            return prod == target
+        if c.kind == "product_le":
+            return prod <= target
+        raise ValueError(c.kind)
+
+    # -- sampling / repair ---------------------------------------------------
+    def sample(self, rng: np.random.Generator, max_tries: int = 512) -> dict[str, Any]:
+        """Uniform valid sample: rejection + constraint-aware repair."""
+        for _ in range(max_tries):
+            vec = [int(rng.integers(len(g.choices))) for g in self.genes]
+            config = self.decode(vec)
+            config = self.repair(config, rng)
+            if self.is_valid(config):
+                return config
+        raise RuntimeError(f"could not sample a valid config for {self.pset.name}")
+
+    def repair(self, config: dict[str, Any], rng: np.random.Generator,
+               max_tries: int = 64) -> dict[str, Any]:
+        """Project a config toward the feasible set by resampling the slots
+        participating in each violated constraint."""
+        config = dict(config)
+        for c in self.pset.constraints:
+            tries = 0
+            while not self._check(config, c) and tries < max_tries:
+                tries += 1
+                slots = [s for s in self.pset.expand_constraint_params(c)
+                         if self._slot_mutable(s)]
+                if not slots:
+                    break
+                if c.kind in ("product_eq", "product_le") and self._try_factor_repair(config, c, rng):
+                    continue
+                s = slots[int(rng.integers(len(slots)))]
+                self._set_slot(config, s, self._random_choice(s, rng))
+        return config
+
+    def _slot_mutable(self, slot: str) -> bool:
+        base = slot.split("[")[0]
+        return base not in self.pset.fixed and base in {g.param for g in self.genes}
+
+    def _random_choice(self, slot: str, rng: np.random.Generator):
+        g = self.genes[self._index[slot]]
+        return g.choices[int(rng.integers(len(g.choices)))]
+
+    def _set_slot(self, config: dict[str, Any], slot: str, value):
+        if "[" in slot:
+            base, idx = slot[:-1].split("[")
+            vals = list(config[base])
+            vals[int(idx)] = value
+            config[base] = tuple(vals)
+        else:
+            config[slot] = value
+
+    def _try_factor_repair(self, config: dict[str, Any], c: Constraint,
+                           rng: np.random.Generator) -> bool:
+        """Exact repair for product constraints over power-of-two-ish slots:
+        sample a random factorization of the target across the slots."""
+        target = config[c.target] if isinstance(c.target, str) else c.target
+        slots = [s for s in self.pset.expand_constraint_params(c) if self._slot_mutable(s)]
+        if not slots or target <= 0:
+            return False
+        for _ in range(32):
+            vals = {}
+            rem = target
+            order = list(slots)
+            rng.shuffle(order)
+            ok = True
+            for i, s in enumerate(order):
+                g = self.genes[self._index[s]]
+                divisors = [v for v in g.choices
+                            if isinstance(v, int) and v >= 1 and rem % v == 0]
+                if c.kind == "product_le":
+                    divisors = [v for v in g.choices
+                                if isinstance(v, int) and 1 <= v <= rem]
+                if not divisors:
+                    ok = False
+                    break
+                v = divisors[int(rng.integers(len(divisors)))]
+                vals[s] = v
+                if c.kind == "product_eq":
+                    if i == len(order) - 1 and rem // v != 1:
+                        # force the last slot to close the product if possible
+                        if rem in g.choices:
+                            vals[s] = rem
+                            v = rem
+                        else:
+                            ok = False
+                            break
+                    rem //= v
+                else:
+                    rem = max(rem // v, 1)
+            if ok:
+                for s, v in vals.items():
+                    self._set_slot(config, s, v)
+                if self._check(config, c):
+                    return True
+        return False
+
+    # -- neighborhood (for GA mutation / local search) -----------------------
+    def mutate(self, config: dict[str, Any], rng: np.random.Generator,
+               p_mut: float = 0.15) -> dict[str, Any]:
+        vec = self.encode(config)
+        for i, g in enumerate(self.genes):
+            if rng.random() < p_mut:
+                vec[i] = int(rng.integers(len(g.choices)))
+        out = self.repair(self.decode(vec), rng)
+        return out if self.is_valid(out) else self.sample(rng)
+
+    def crossover(self, a: dict[str, Any], b: dict[str, Any],
+                  rng: np.random.Generator) -> dict[str, Any]:
+        va, vb = self.encode(a), self.encode(b)
+        mask = rng.integers(0, 2, size=len(va)).astype(bool)
+        child = np.where(mask, va, vb)
+        out = self.repair(self.decode(child), rng)
+        return out if self.is_valid(out) else self.sample(rng)
+
+
+def constrained_parallelization_count(n_npus: int, dims: int = 4) -> int:
+    """#(d_1..d_dims) power-of-two with product == n_npus — the paper's '286
+    possible combinations' for 4 parallelization dims over 1024 NPUs."""
+    k = int(math.log2(n_npus))
+    return math.comb(k + dims - 1, dims - 1)

@@ -1,0 +1,125 @@
+"""Multi-dimensional network fabrics from {Ring, Switch, FullyConnected}
+building blocks (paper Fig. 3), with link counts and a LIBRA-style dollar
+cost model for the Perf-per-Network-Cost reward."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+TOPO_KINDS = ("ring", "switch", "fc")
+
+
+@dataclass(frozen=True)
+class TopoDim:
+    kind: str            # ring | switch | fc
+    npus: int            # NPUs along this dimension
+    bw: float            # GB/s per link (paper's 'Bandwidth per Dim')
+    latency_us: float = 0.5  # per-hop link latency
+
+    def __post_init__(self):
+        if self.kind not in TOPO_KINDS:
+            raise ValueError(f"unknown topology kind {self.kind}")
+        if self.npus < 2:
+            raise ValueError("a network dimension needs >= 2 NPUs")
+
+    # -- structural properties -------------------------------------------
+    def links(self) -> int:
+        """Physical links along this dim (per group of `npus`)."""
+        n = self.npus
+        if self.kind == "ring":
+            return n                      # unidirectional ring of n links
+        if self.kind == "switch":
+            return n                      # n NPU<->switch links
+        return n * (n - 1) // 2           # fully connected
+
+    def links_per_npu(self) -> int:
+        if self.kind == "ring":
+            return 2                      # tx+rx neighbours (bidirectional)
+        if self.kind == "switch":
+            return 1
+        return self.npus - 1
+
+    def bisection_bw(self) -> float:
+        n = self.npus
+        if self.kind == "ring":
+            return 2 * self.bw
+        if self.kind == "switch":
+            return (n // 2) * self.bw
+        return (n // 2) * (n - n // 2) * self.bw / 1.0
+
+
+@dataclass(frozen=True)
+class Network:
+    dims: tuple[TopoDim, ...]
+
+    @property
+    def n_npus(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d.npus
+        return n
+
+    def describe(self) -> str:
+        return " x ".join(f"{d.kind}({d.npus})@{d.bw}GB/s" for d in self.dims)
+
+    # -- LIBRA-style dollar cost ------------------------------------------
+    # $/ (GB/s) per link, by technology tier: dim 0 is the cheapest
+    # (on-board electrical), outer dims get progressively more expensive
+    # (optical / switched fabrics).  Switch ports add a fixed premium.
+    _LINK_COST_PER_GBPS = (1.0, 2.0, 6.0, 12.0)
+    _SWITCH_PREMIUM = 1.5  # switched dims pay for the switch silicon
+
+    def dollar_cost(self) -> float:
+        total = 0.0
+        groups = 1
+        n = self.n_npus
+        for i, d in enumerate(self.dims):
+            tier = self._LINK_COST_PER_GBPS[min(i, len(self._LINK_COST_PER_GBPS) - 1)]
+            n_groups = n // d.npus      # how many parallel copies of this dim
+            cost = d.links() * d.bw * tier
+            if d.kind == "switch":
+                cost *= self._SWITCH_PREMIUM
+            total += cost * n_groups
+        return total
+
+    def bw_per_npu(self) -> float:
+        """Sum of per-dim bandwidth allocated to each NPU (the paper's
+        'BW per NPU' regularizer denominator)."""
+        return sum(d.bw for d in self.dims)
+
+
+def build_network(topology: Sequence[str], npus_per_dim: Sequence[int],
+                  bw_per_dim: Sequence[float],
+                  latency_us: Sequence[float] | float = 0.5) -> Network:
+    if isinstance(latency_us, (int, float)):
+        latency_us = [float(latency_us)] * len(topology)
+    dims = tuple(
+        TopoDim(t, int(n), float(b), float(l))
+        for t, n, b, l in zip(topology, npus_per_dim, bw_per_dim, latency_us)
+    )
+    return Network(dims)
+
+
+# -- the paper's Table 3 systems -------------------------------------------
+
+def system_1() -> Network:
+    """512 TPUv5p-like: [RI, RI, RI, SW], 4x4x4x8, [200,200,200,50]."""
+    return build_network(("ring", "ring", "ring", "switch"), (4, 4, 4, 8),
+                         (200, 200, 200, 50))
+
+
+def system_2() -> Network:
+    """1,024 NPUs 4D (Themis-like): [RI, FC, RI, SW], 4x8x4x8."""
+    return build_network(("ring", "fc", "ring", "switch"), (4, 8, 4, 8),
+                         (375, 175, 150, 100))
+
+
+def system_3() -> Network:
+    """2,048 H100-like: [FC, SW, RI, RI], 8x16x4x4."""
+    return build_network(("fc", "switch", "ring", "ring"), (8, 16, 4, 4),
+                         (900, 100, 50, 12.5))
+
+
+def tpu_v5e_pod() -> Network:
+    """Our dry-run target: 16x16 pod, 2D torus-ish ICI at ~50 GB/s/link."""
+    return build_network(("ring", "ring"), (16, 16), (50, 50), latency_us=0.3)

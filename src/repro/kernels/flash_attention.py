@@ -1,0 +1,112 @@
+"""Pallas TPU flash attention: blockwise online-softmax, VMEM-resident tiles.
+
+Grid: (batch*heads, q_blocks, kv_blocks) — the kv dim iterates sequentially
+carrying (m, l, acc) in VMEM scratch; q/k/v tiles stream HBM->VMEM per
+BlockSpec; block sizes default to 128x128 so the QK^T and PV contractions
+land on MXU-aligned shapes.  Fully-masked tiles (beyond the causal diagonal
+or outside the sliding window) are skipped.  Validated in interpret mode
+against ``repro.kernels.ref.attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  block_q: int, block_k: int, seq_len: int, causal: bool,
+                  window: int, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    run = jnp.bool_(True)
+    if causal:  # tile fully above the diagonal
+        run &= k_start <= q_start + block_q - 1
+    if window:  # tile fully left of the window
+        run &= k_start + block_k - 1 > q_start - window
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                  # (block_q, hd)
+        k = k_ref[0].astype(jnp.float32)                  # (block_k, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kpos < seq_len
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    """q, k, v: (BH, S, hd) with k/v already repeated to q heads.
+
+    Returns (BH, S, hd).  Sequence lengths must be block multiples
+    (ops.py pads).
+    """
+    bh, s, hd = q.shape
+    t = k.shape[1]
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    assert s % block_q == 0 and t % block_k == 0, (s, t, block_q, block_k)
+    scale = scale or 1.0 / math.sqrt(hd)
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    grid = (bh, s // block_q, t // block_k)
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, seq_len=t,
+        causal=causal, window=window, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # running max
+            pltpu.VMEM((block_q,), jnp.float32),      # running denom
+            pltpu.VMEM((block_q, hd), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

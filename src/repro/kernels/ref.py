@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale: float | None = None):
+    """Dense masked softmax attention.  q/k/v: (BH, S, hd)."""
+    bh, s, hd = q.shape
+    t = k.shape[1]
+    scale = scale or 1.0 / math.sqrt(hd)
+    sc = jnp.einsum("bqk,btk->bqt", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    sc = jnp.where(mask[None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bqt,btk->bqk", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(x, dt, a, b, c):
+    """Naive sequential SSM recurrence (the mathematical definition).
+
+    x: (BH,S,hd); dt: (BH,S); a: (BH,); b,c: (BH,S,ds)
+    h_t = exp(dt_t * a) * h_{t-1} + dt_t * x_t (outer) b_t ;  y_t = h_t c_t
+    """
+    bh, s, hd = x.shape
+    ds = b.shape[-1]
+    f32 = jnp.float32
+
+    def per_seq(xs, dts, av, bs, cs):
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            decay = jnp.exp(dtt * av)
+            h = decay * h + bt[:, None] * (dtt * xt)[None, :]
+            y = jnp.einsum("nh,n->h", h, ct)
+            return h, y
+
+        h0 = jnp.zeros((ds, hd), f32)
+        hl, ys = jax.lax.scan(step, h0, (xs.astype(f32), dts.astype(f32),
+                                         bs.astype(f32), cs.astype(f32)))
+        return ys, hl
+
+    y, hlast = jax.vmap(per_seq)(x, dt, a, b, c)
+    return y.astype(x.dtype), hlast
+
+
+def rmsnorm_ref(x, w, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))).astype(x.dtype)

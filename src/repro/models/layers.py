@@ -1,0 +1,121 @@
+"""Parameter descriptors + primitive layers (pure-JAX, pytree params).
+
+Every parameter is declared as a ``ParamDef(shape, axes, init)`` where
+``axes`` are *logical* sharding axes consumed by ``repro.parallel.sharding``.
+Modules are plain functions: ``<module>_defs(spec)`` returns a nested dict of
+ParamDefs; ``init_tree`` materializes it; ``apply`` functions consume the
+resulting pytree.  No framework dependency (flax-free) — this keeps pytrees
+transparent for pjit sharding, checkpointing, and elastic resharding.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ParamDef(NamedTuple):
+    shape: tuple[int, ...]
+    axes: tuple  # logical axis name (or None) per dim
+    init: str = "normal"  # normal | zeros | ones | ssm_a_log | ssm_dt_bias
+    scale: float = 1.0
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _init_leaf(key, d: ParamDef, dtype):
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "ssm_a_log":  # A in [-1, -16): log for positivity
+        u = jax.random.uniform(key, d.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if d.init == "ssm_dt_bias":  # dt in [1e-3, 1e-1] through softplus
+        u = jax.random.uniform(key, d.shape, jnp.float32)
+        dt = jnp.exp(u * (math.log(1e-1) - math.log(1e-3)) + math.log(1e-3))
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)  # inv softplus
+    fan_in = d.shape[0] if len(d.shape) >= 2 else max(d.shape[-1], 1)
+    std = d.scale / math.sqrt(fan_in)
+    return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_tree(rng, defs, dtype=jnp.float32):
+    """Materialize a nested dict of ParamDefs into arrays."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_init_leaf(k, d, dtype) for k, d in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_tree(defs, dtype=jnp.float32):
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs, is_leaf=is_def)
+
+
+def axes_tree(defs):
+    return jax.tree.map(lambda d: d.axes, defs, is_leaf=is_def)
+
+
+def stack_defs(defs, n: int, axis_name=None):
+    """Prepend a stacking dim (for scan-over-layers parameter stacks)."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, (axis_name,) + d.axes, d.init, d.scale),
+        defs, is_leaf=is_def)
+
+
+def param_count(defs) -> int:
+    return sum(int(np.prod(d.shape)) for d in jax.tree.leaves(defs, is_leaf=is_def))
+
+
+# ---------------------------------------------------------------------------
+# primitive ops
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, weight, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)).astype(dt)) * (1.0 + weight.astype(dt))
+
+
+def linear(x, w, b=None):
+    y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def embed_defs(vocab: int, d: int) -> ParamDef:
+    return ParamDef((vocab, d), ("vocab", "embed"), "normal")
+
+
+def take_embedding(table, tokens):
+    return jnp.take(table, tokens, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (S,) or scalar broadcastable."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,241 @@
+"""Mamba2 (SSD — state-space duality) mixer.
+
+Training/prefill runs the chunked SSD algorithm (arXiv:2405.21060): the
+sequence is split into chunks; within a chunk the *dual* quadratic form is a
+pair of matmuls (MXU-friendly — this is the part the Pallas ``ssd_scan``
+kernel tiles for VMEM), and chunk-to-chunk state is carried by an associative
+recurrence.  Decode is the O(1) recurrent update.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec
+from repro.models.layers import ParamDef, rmsnorm
+from repro.parallel.sharding import ShardingPlan
+
+DEFAULT_CHUNK = 256
+
+
+def mamba_defs(spec: ArchSpec) -> dict[str, ParamDef]:
+    d, din = spec.d_model, spec.d_inner
+    g, ds, nh, cw = spec.ssm_groups, spec.ssm_state, spec.ssm_heads, spec.ssm_conv
+    return {
+        "w_z": ParamDef((d, din), ("embed", "d_inner")),
+        "w_x": ParamDef((d, din), ("embed", "d_inner")),
+        "w_b": ParamDef((d, g * ds), ("embed", None)),
+        "w_c": ParamDef((d, g * ds), ("embed", None)),
+        "w_dt": ParamDef((d, nh), ("embed", None)),
+        "conv_x": ParamDef((cw, din), (None, "d_inner")),
+        "conv_b": ParamDef((cw, g * ds), (None, None)),
+        "conv_c": ParamDef((cw, g * ds), (None, None)),
+        "a_log": ParamDef((nh,), (None,), "ssm_a_log"),
+        "dt_bias": ParamDef((nh,), (None,), "ssm_dt_bias"),
+        "d_skip": ParamDef((nh,), (None,), "ones"),
+        "norm": ParamDef((din,), ("d_inner",), "zeros"),
+        "w_out": ParamDef((din, d), ("d_inner", "embed")),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv along time.  x: (B,S,C); w: (cw, C)."""
+    cw = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(cw):  # cw is 4: unrolled adds beat a conv op here
+        out = out + pad[:, i : i + x.shape[1]] * w[i].astype(x.dtype)
+    return jax.nn.silu(out)
+
+
+def _segsum(t):
+    """Stable 'segment sum' producing the lower-tri decay exponents.
+
+    t: (..., L) -> (..., L, L) with out[i, j] = sum_{j < m <= i} t[m].
+    """
+    l = t.shape[-1]
+    cs = jnp.cumsum(t, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b, c, chunk: int = DEFAULT_CHUNK, h0=None):
+    """Chunked SSD scan (single pass over chunks).
+
+    x:  (B, S, H, P)   inputs
+    dt: (B, S, H)      positive step sizes
+    a:  (H,)           negative decay rates
+    b:  (B, S, G, N)   input projections (G groups broadcast over H)
+    c:  (B, S, G, N)   output projections
+    returns y: (B, S, H, P), final state (B, H, P, N)
+
+    One ``lax.scan`` over chunks carries the (B, H, P, N) state; inside a
+    chunk the dual quadratic form is two MXU matmuls.  Scanning (rather than
+    materializing all chunks) keeps the O(L^2) intra-chunk tensors to ONE
+    chunk's worth — the same streaming the Pallas ``ssd_scan`` kernel does
+    in VMEM.
+    """
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    l = min(chunk, s)
+    assert s % l == 0, (s, l)
+    nc = s // l
+    rep = h // g
+    f32 = jnp.float32
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(bsz, nc, l, *t.shape[2:]), 1, 0)
+
+    xc = to_chunks(x)                       # (nc,B,L,H,P)
+    dtc = to_chunks(dt.astype(f32))         # (nc,B,L,H)
+    bc = to_chunks(b)                       # (nc,B,L,G,N)
+    cc = to_chunks(c)
+
+    af = a.astype(f32)
+
+    def body(hprev, inp):
+        xi, dti, bi, ci = inp
+        bh = jnp.repeat(bi, rep, axis=2) if rep > 1 else bi   # (B,L,H,N)
+        ch = jnp.repeat(ci, rep, axis=2) if rep > 1 else ci
+        da = dti * af                                          # (B,L,H)
+        da_cum = jnp.cumsum(da, axis=1)
+        seg = _segsum(jnp.moveaxis(da, -1, -2))                # (B,H,L,L)
+        cb = jnp.einsum("blhn,bmhn->bhlm", ch.astype(f32), bh.astype(f32))
+        att = cb * jnp.exp(seg)
+        xdt = xi.astype(f32) * dti[..., None]
+        y_diag = jnp.einsum("bhlm,bmhp->blhp", att, xdt)
+        # contribution of the incoming state
+        in_decay = jnp.exp(da_cum)                             # (B,L,H)
+        y_off = jnp.einsum("blhn,bhpn->blhp", ch.astype(f32) * in_decay[..., None], hprev)
+        # state update
+        decay_to_end = jnp.exp(da_cum[:, -1:, :] - da_cum)     # (B,L,H)
+        st = jnp.einsum("blhn,blhp->bhpn",
+                        bh.astype(f32) * (dti * decay_to_end)[..., None],
+                        xi.astype(f32))
+        hnew = hprev * jnp.exp(da_cum[:, -1, :])[..., None, None] + st
+        return hnew, (y_diag + y_off).astype(x.dtype)
+
+    init = jnp.zeros((bsz, h, p, n), f32) if h0 is None else h0.astype(f32)
+    # checkpoint per chunk: keeps the O(L^2) intra-chunk tensors out of the
+    # scan's saved residuals (recomputed in backward)
+    body = jax.checkpoint(body, prevent_cse=False)
+    hlast, yc = jax.lax.scan(body, init, (xc, dtc, bc, cc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(bsz, s, h, p)
+    return y, hlast
+
+
+def mamba_fwd(p, x, spec: ArchSpec, plan: ShardingPlan, *, chunk: int = DEFAULT_CHUNK):
+    """x: (B, S, D) -> (B, S, D) (+ optional cache for prefill)."""
+    bsz, s, d = x.shape
+    din, g, ds, nh = spec.d_inner, spec.ssm_groups, spec.ssm_state, spec.ssm_heads
+    hd = spec.ssm_head_dim
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"].astype(x.dtype))
+    xi = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(x.dtype))
+    bi = jnp.einsum("bsd,de->bse", x, p["w_b"].astype(x.dtype))
+    ci = jnp.einsum("bsd,de->bse", x, p["w_c"].astype(x.dtype))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(x.dtype)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+
+    xi = _causal_conv(xi, p["conv_x"])
+    bi = _causal_conv(bi, p["conv_b"])
+    ci = _causal_conv(ci, p["conv_c"])
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = plan.constrain(xi.reshape(bsz, s, nh, hd), ("batch", None, "ssm_heads", None))
+    dt = plan.constrain(dt, ("batch", None, "ssm_heads"))
+    y, hlast = ssd_chunked(
+        xh, dt, a,
+        bi.reshape(bsz, s, g, ds), ci.reshape(bsz, s, g, ds), chunk)
+    y = y + xh * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, din)
+    y = plan.constrain(y, ("batch", "seq", "d_inner"))
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], spec.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype))
+    return out
+
+
+def mamba_cache_defs(spec: ArchSpec, batch: int, dtype=jnp.bfloat16) -> dict[str, ParamDef]:
+    din, g, ds, nh, hd, cw = (spec.d_inner, spec.ssm_groups, spec.ssm_state,
+                              spec.ssm_heads, spec.ssm_head_dim, spec.ssm_conv)
+    conv_ch = din + 2 * g * ds
+    return {
+        "conv": ParamDef((batch, cw - 1, conv_ch), ("batch", None, "d_inner"), "zeros"),
+        "ssm": ParamDef((batch, nh, hd, ds), ("batch", None, "ssm_head_dim", None), "zeros"),
+    }
+
+
+def mamba_prefill(p, x, spec: ArchSpec, plan: ShardingPlan, cache,
+                  *, chunk: int = DEFAULT_CHUNK):
+    """Forward over the prompt + produce decode cache (conv tail + final state)."""
+    bsz, s, d = x.shape
+    din, g, ds, nh, hd = spec.d_inner, spec.ssm_groups, spec.ssm_state, spec.ssm_heads, spec.ssm_head_dim
+    cw = spec.ssm_conv
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"].astype(x.dtype))
+    xi0 = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(x.dtype))
+    bi0 = jnp.einsum("bsd,de->bse", x, p["w_b"].astype(x.dtype))
+    ci0 = jnp.einsum("bsd,de->bse", x, p["w_c"].astype(x.dtype))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(x.dtype)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    pre_conv = jnp.concatenate([xi0, bi0, ci0], axis=-1)  # raw pre-activation stream
+    xi = _causal_conv(xi0, p["conv_x"])
+    bi = _causal_conv(bi0, p["conv_b"])
+    ci = _causal_conv(ci0, p["conv_c"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = plan.constrain(xi.reshape(bsz, s, nh, hd), ("batch", None, "ssm_heads", None))
+    dt = plan.constrain(dt, ("batch", None, "ssm_heads"))
+    y, hlast = ssd_chunked(
+        xh, dt, a,
+        bi.reshape(bsz, s, g, ds), ci.reshape(bsz, s, g, ds), chunk)
+    y = y + xh * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, din)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], spec.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype))
+    newc = {
+        "conv": pre_conv[:, -(cw - 1):, :].astype(cache["conv"].dtype),
+        "ssm": hlast.astype(cache["ssm"].dtype),
+    }
+    return out, newc
+
+
+def mamba_decode(p, x, spec: ArchSpec, plan: ShardingPlan, cache):
+    """One-token recurrent update.  x: (B, D)."""
+    bsz, d = x.shape
+    din, g, ds, nh, hd = spec.d_inner, spec.ssm_groups, spec.ssm_state, spec.ssm_heads, spec.ssm_head_dim
+    cw = spec.ssm_conv
+    z = x @ p["w_z"].astype(x.dtype)
+    xi = x @ p["w_x"].astype(x.dtype)
+    bi = x @ p["w_b"].astype(x.dtype)
+    ci = x @ p["w_c"].astype(x.dtype)
+    dt = jax.nn.softplus((x @ p["w_dt"].astype(x.dtype)).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B, nh)
+
+    new_raw = jnp.concatenate([xi, bi, ci], axis=-1)  # (B, conv_ch)
+    window = jnp.concatenate([cache["conv"].astype(x.dtype), new_raw[:, None, :]], axis=1)  # (B,cw,C)
+    wfull = jnp.concatenate([p["conv_x"], p["conv_b"], p["conv_c"]], axis=1)  # (cw, C)
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, wfull.astype(x.dtype)))
+    xi = conv_out[:, :din]
+    bi = conv_out[:, din : din + g * ds]
+    ci = conv_out[:, din + g * ds :]
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))          # (nh,)
+    decay = jnp.exp(dt * a)                                # (B, nh)
+    xh = xi.reshape(bsz, nh, hd).astype(jnp.float32)
+    bh = jnp.repeat(bi.reshape(bsz, g, ds), nh // g, axis=1).astype(jnp.float32)  # (B,nh,ds)
+    chp = jnp.repeat(ci.reshape(bsz, g, ds), nh // g, axis=1).astype(jnp.float32)
+    h = cache["ssm"].astype(jnp.float32)
+    h = h * decay[..., None, None] + (dt[..., None] * xh)[..., None] * bh[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", h, chp).astype(x.dtype)
+    y = y + xh.astype(x.dtype) * p["d_skip"].astype(x.dtype)[None, :, None]
+    y = y.reshape(bsz, din)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], spec.norm_eps)
+    out = y @ p["w_out"].astype(x.dtype)
+    newc = {
+        "conv": window[:, 1:, :].astype(cache["conv"].dtype),
+        "ssm": h.astype(cache["ssm"].dtype),
+    }
+    return out, newc

@@ -1,0 +1,31 @@
+"""Dense FFN: SwiGLU (llama-family) or GELU (gpt/gemma/musicgen-style)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec
+from repro.models.layers import ParamDef
+from repro.parallel.sharding import ShardingPlan
+
+
+def mlp_defs(spec: ArchSpec) -> dict[str, ParamDef]:
+    d, f = spec.d_model, spec.d_ff
+    defs = {
+        "w_up": ParamDef((d, f), ("embed", "ff")),
+        "w_down": ParamDef((f, d), ("ff", "embed")),
+    }
+    if spec.act == "silu":
+        defs["w_gate"] = ParamDef((d, f), ("embed", "ff"))
+    return defs
+
+
+def mlp_apply(p, x, spec: ArchSpec, plan: ShardingPlan) -> jax.Array:
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    if spec.act == "silu":
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    h = plan.constrain(h, ("batch", "seq", "ff"))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))

@@ -1,0 +1,146 @@
+"""Top-level LM: embeddings/frontend -> block stack -> head.
+
+Three entry points per architecture, matching the evaluation grid:
+  * ``forward``     — full-sequence logits (training shapes)
+  * ``prefill``     — prompt pass that also fills decode caches
+  * ``decode_step`` — one token with caches (decode / long-context shapes)
+
+``[audio]``/``[vlm]`` archs use the 'embeddings' frontend: ``input_specs``
+supplies precomputed frame/patch embeddings (the modality encoder is a stub
+per the assignment), and the backbone is exercised fully.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec
+from repro.models import blocks
+from repro.models.layers import ParamDef, abstract_tree, axes_tree, init_tree, rmsnorm, take_embedding
+from repro.parallel.sharding import NULL_PLAN, ShardingPlan
+
+
+def model_param_defs(spec: ArchSpec) -> dict[str, Any]:
+    d, v = spec.d_model, spec.vocab_size
+    defs: dict[str, Any] = {
+        "stack": blocks.stack_param_defs(spec),
+        "final_norm": ParamDef((d,), ("embed",), "zeros"),
+    }
+    if spec.frontend == "tokens":
+        defs["embed"] = ParamDef((v, d), ("vocab", "embed"))
+        if not spec.tie_embeddings:
+            defs["lm_head"] = ParamDef((d, v), ("embed", "vocab"))
+    else:
+        defs["lm_head"] = ParamDef((d, v), ("embed", "vocab"))
+    return defs
+
+
+def init_params(rng, spec: ArchSpec, dtype=jnp.float32):
+    return init_tree(rng, model_param_defs(spec), dtype)
+
+
+def abstract_params(spec: ArchSpec, dtype=jnp.float32):
+    return abstract_tree(model_param_defs(spec), dtype)
+
+
+def param_axes(spec: ArchSpec):
+    return axes_tree(model_param_defs(spec))
+
+
+def cache_defs(spec: ArchSpec, batch: int, seq: int, dtype=jnp.bfloat16):
+    return blocks.stack_cache_defs(spec, batch, seq, dtype)
+
+
+def init_caches(spec: ArchSpec, batch: int, seq: int, dtype=jnp.bfloat16):
+    return init_tree(jax.random.PRNGKey(0), cache_defs(spec, batch, seq, dtype), dtype)
+
+
+def abstract_caches(spec: ArchSpec, batch: int, seq: int, dtype=jnp.bfloat16):
+    return abstract_tree(cache_defs(spec, batch, seq, dtype), dtype)
+
+
+def cache_axes(spec: ArchSpec, batch: int, seq: int):
+    return axes_tree(cache_defs(spec, batch, seq))
+
+
+# ---------------------------------------------------------------------------
+
+def _embed_in(params, inputs, spec: ArchSpec, plan: ShardingPlan, compute_dtype):
+    if spec.frontend == "tokens":
+        x = take_embedding(params["embed"], inputs).astype(compute_dtype)
+    else:
+        x = inputs.astype(compute_dtype)  # precomputed (B, S, D) embeddings
+    return plan.constrain(x, ("batch", "seq", "embed"))
+
+
+def _head(params, x, spec: ArchSpec, plan: ShardingPlan):
+    x = rmsnorm(x, params["final_norm"], spec.norm_eps)
+    if spec.frontend == "tokens" and spec.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, params["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, params["lm_head"].astype(x.dtype))
+    axes = ("batch", "seq", "vocab") if logits.ndim == 3 else ("batch", "vocab")
+    return plan.constrain(logits, axes)
+
+
+def forward(params, inputs, spec: ArchSpec, plan: ShardingPlan = NULL_PLAN,
+            *, compute_dtype=jnp.float32, remat: str = "dots"):
+    """inputs: (B, S) int32 tokens or (B, S, D) embeddings -> (logits, aux)."""
+    x = _embed_in(params, inputs, spec, plan, compute_dtype)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x, aux = blocks.stack_train(params["stack"], x, positions, spec, plan, remat)
+    return _head(params, x, spec, plan), aux
+
+
+def forward_hidden(params, inputs, spec: ArchSpec, plan: ShardingPlan = NULL_PLAN,
+                   *, compute_dtype=jnp.float32, remat: str = "dots"):
+    """Like ``forward`` but stops before the LM head: returns the
+    final-normed hidden states.  Pair with ``head_fn`` for chunked-CE
+    training (the big-vocab memory optimization)."""
+    x = _embed_in(params, inputs, spec, plan, compute_dtype)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x, aux = blocks.stack_train(params["stack"], x, positions, spec, plan, remat)
+    x = rmsnorm(x, params["final_norm"], spec.norm_eps)
+    return x, aux
+
+
+def head_fn(params, spec: ArchSpec, plan: ShardingPlan = NULL_PLAN):
+    """Closure projecting (already final-normed) hidden chunks to logits."""
+    def f(h):
+        if spec.frontend == "tokens" and spec.tie_embeddings:
+            logits = jnp.einsum("...d,vd->...v", h, params["embed"].astype(h.dtype))
+        else:
+            logits = jnp.einsum("...d,dv->...v", h, params["lm_head"].astype(h.dtype))
+        axes = ("batch", "seq", "vocab") if logits.ndim == 3 else ("batch", "vocab")
+        return plan.constrain(logits, axes)
+    return f
+
+
+def prefill(params, inputs, caches, spec: ArchSpec, plan: ShardingPlan = NULL_PLAN,
+            *, compute_dtype=jnp.bfloat16):
+    """Prompt pass: returns (last-position logits (B, V), filled caches)."""
+    x = _embed_in(params, inputs, spec, plan, compute_dtype)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x, newc = blocks.stack_prefill(params["stack"], x, positions, spec, plan, caches)
+    logits = _head(params, x[:, -1, :], spec, plan)
+    return logits, newc
+
+
+def decode_step(params, caches, inputs, pos, spec: ArchSpec,
+                plan: ShardingPlan = NULL_PLAN, *, compute_dtype=jnp.bfloat16):
+    """One decode step.  inputs: (B,) int32 token ids or (B, D) embeddings;
+    pos: scalar int32 position of the new token."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if spec.frontend == "tokens":
+        x = take_embedding(params["embed"], inputs).astype(compute_dtype)
+    else:
+        x = inputs.astype(compute_dtype)
+    x = plan.constrain(x, ("batch", "embed"))
+    x, newc = blocks.stack_decode(params["stack"], x, pos, spec, plan, caches)
+    logits = _head(params, x, spec, plan)
+    return logits, newc

@@ -1,0 +1,124 @@
+"""Top-k routed Mixture-of-Experts — GShard/Switch-style grouped einsum
+dispatch (the canonical TPU-native formulation).
+
+Tokens are reshaped into (groups, group_size) aligned with the mesh: groups
+shard over ('data','model'), so the dispatch einsum lowers to an all-to-all
+into expert-sharded buffers — the paper's MoE collective pattern — and every
+tensor stays partitioned by construction (scatter/gather-based dispatch made
+XLA's SPMD partitioner replicate the (E,C,D) buffers: +42 GiB/device on
+jamba; einsums never do).
+
+Capacity is per (group, expert): C = group_size * top_k * cf / E, overflow
+dropped (Switch semantics).  Position-within-expert is a cumsum; the
+dispatch/combine tensors are (G, T_g, E, C) one-hots contracted on the MXU.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec
+from repro.models.layers import ParamDef
+from repro.parallel.sharding import ShardingPlan
+
+CAPACITY_FACTOR = 1.25
+GROUP_SIZE = 256
+
+
+def moe_defs(spec: ArchSpec) -> dict[str, ParamDef]:
+    d, f, e = spec.d_model, spec.d_ff, spec.n_experts
+    return {
+        "router": ParamDef((d, e), ("embed", "expert")),
+        "w_gate": ParamDef((e, d, f), ("expert", "embed", "ff")),
+        "w_up": ParamDef((e, d, f), ("expert", "embed", "ff")),
+        "w_down": ParamDef((e, f, d), ("expert", "ff", "embed")),
+    }
+
+
+def expert_capacity(group_size: int, spec: ArchSpec, factor: float | None = None) -> int:
+    factor = CAPACITY_FACTOR if factor is None else factor
+    cap = int(group_size * spec.top_k * factor / spec.n_experts)
+    return max(8, -(-cap // 8) * 8)  # round up to a multiple of 8 (lane-friendly)
+
+
+def _dispatch_tensors(logits, k: int, e: int, cap: int):
+    """logits: (G, T, E) fp32 -> (dispatch mask, combine weights, aux).
+
+    Pure one-hot/cumsum construction (no scatter): for each of the k routing
+    slots, a token's position within its expert is the running count of
+    earlier assignments to that expert (earlier tokens first, then earlier
+    slots), and the (E, C) one-hot outer product places it in the buffer.
+    """
+    g, t, _ = logits.shape
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)                    # (G,T,k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    counts = jnp.zeros((g, 1, e), jnp.float32)
+    dispatch = None
+    combine = None
+    dropped = 0.0
+    for j in range(k):
+        oh = jax.nn.one_hot(top_i[..., j], e, dtype=jnp.float32)      # (G,T,E)
+        pos_in_e = jnp.cumsum(oh, axis=1) - oh + counts                # (G,T,E)
+        pos = jnp.sum(pos_in_e * oh, axis=-1)                          # (G,T)
+        keep = (pos < cap).astype(jnp.float32)
+        oh_c = jax.nn.one_hot(pos, cap, dtype=jnp.float32)             # (G,T,C)
+        d_j = jnp.einsum("gte,gtc->gtec", oh * keep[..., None], oh_c)
+        c_j = d_j * top_w[..., j][..., None, None]
+        dispatch = d_j if dispatch is None else dispatch + d_j
+        combine = c_j if combine is None else combine + c_j
+        dropped = dropped + jnp.sum(1.0 - keep)
+        counts = counts + jnp.sum(oh, axis=1, keepdims=True)
+
+    # Switch-style load-balance loss over the top-1 assignment
+    fraction = jnp.mean(jax.nn.one_hot(top_i[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    lb_loss = e * jnp.sum(fraction * jnp.mean(probs, axis=(0, 1)))
+    drop_frac = dropped / (g * t * k)
+    return dispatch, combine, {"lb_loss": lb_loss, "drop_frac": drop_frac}
+
+
+def moe_apply(p, x, spec: ArchSpec, plan: ShardingPlan,
+              *, capacity_factor: float | None = None,
+              group_size: int | None = None):
+    """x: (B, S, D) -> (y, aux)."""
+    b, s, d = x.shape
+    e, k = spec.n_experts, spec.top_k
+    group_size = GROUP_SIZE if group_size is None else group_size
+    tg = min(group_size, s) if s > 1 else 1
+    while s % tg:
+        tg //= 2
+    ng = (b * s) // tg
+    cap = expert_capacity(tg, spec, capacity_factor)
+
+    # chunk-MAJOR group order: G = chunk * B + b.  With the residual stream
+    # sharded (batch -> data, seq -> model), this makes the (G, Tg, D) view
+    # exactly shard-aligned under a ('model','data')-major group sharding —
+    # no resharding of activations at the MoE boundary (the b-major order
+    # forced XLA to all-gather the full residual every MoE layer).
+    nc = s // tg
+    xg = x.reshape(b, nc, tg, d).transpose(1, 0, 2, 3).reshape(ng, tg, d)
+    xg = plan.constrain(xg, ("moe_groups", None, None))
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"].astype(x.dtype)).astype(jnp.float32)
+    dispatch, combine, aux = _dispatch_tensors(logits, k, e, cap)
+    # the dispatch mask is a step function — its cotangent is mathematically
+    # zero but structurally a giant (G,T,E,C) backward dot; routing gradients
+    # flow through `combine` (Switch/GShard convention)
+    dispatch = jax.lax.stop_gradient(dispatch).astype(x.dtype)
+    combine = combine.astype(x.dtype)
+    dispatch = plan.constrain(dispatch, ("moe_groups", None, None, None))
+    combine = plan.constrain(combine, ("moe_groups", None, None, None))
+
+    xe = jnp.einsum("gtd,gtec->gecd", xg, dispatch)
+    xe = plan.constrain(xe, ("moe_groups", "expert", None, None))
+    gate = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(x.dtype))
+    up = jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(gate) * up
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(x.dtype))
+    ye = plan.constrain(ye, ("moe_groups", "expert", None, None))
+    y = jnp.einsum("gecd,gtec->gtd", ye, combine)
+    y = plan.constrain(y, ("moe_groups", None, None))
+    y = y.reshape(nc, b, tg, d).transpose(1, 0, 2, 3).reshape(b, s, d)
+    return y, aux

@@ -1,0 +1,68 @@
+"""Explicit data-parallel train step via shard_map — the path that can
+intercept the gradient all-reduce (pjit's implicit DP reduction cannot be),
+enabling int8 error-feedback gradient compression on the wire.
+
+Layout: pure DP over one mesh axis; params/optimizer replicated, batch
+sharded.  The compressed all-reduce cuts DP gradient wire bytes ~4x
+(8-bit payload + fp32 scale) with the quantization residual carried across
+steps (see parallel/compression.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchSpec
+from repro.parallel.compression import compressed_psum, init_error_state
+from repro.parallel.sharding import NULL_PLAN
+from repro.train import optimizer as opt
+from repro.train.train_step import RunConfig, make_loss_fn
+
+
+def make_dp_train_step(spec: ArchSpec, mesh: Mesh, cfg: RunConfig,
+                       *, axis: str = "data", compress_bits: int = 0):
+    """Returns (train_step, init_extra) where train_step(state, batch) runs
+    under shard_map over `axis`.  compress_bits=0 -> plain psum;
+    8 -> int8 error-feedback compression (state carries the residual)."""
+    loss_fn = make_loss_fn(spec, NULL_PLAN, cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+
+    def local_step(state, batch):
+        (loss, _), grads = grad_fn(state["params"], batch)
+        if compress_bits:
+            grads, new_err = compressed_psum(grads, axis, state["grad_error"],
+                                             bits=compress_bits)
+        else:
+            grads = jax.tree.map(lambda g: jax.lax.pmean(g, axis), grads)
+            new_err = state.get("grad_error")
+        loss = jax.lax.pmean(loss, axis)
+        inner = {k: v for k, v in state.items() if k != "grad_error"}
+        new_state, metrics = opt.apply_updates(inner, grads, cfg.opt)
+        if new_err is not None:
+            new_state["grad_error"] = new_err
+        return new_state, {"loss": loss, **metrics}
+
+    replicated = P()
+    batch_spec = {"inputs": P(axis), "labels": P(axis)}
+
+    def train_step(state, batch):
+        state_specs = jax.tree.map(lambda _: replicated, state)
+        f = shard_map(local_step, mesh=mesh,
+                      in_specs=(state_specs, batch_spec),
+                      out_specs=(state_specs, replicated),
+                      check_rep=False)
+        return f(state, batch)
+
+    def init_extra(state: dict[str, Any]) -> dict[str, Any]:
+        if compress_bits:
+            state = dict(state)
+            state["grad_error"] = init_error_state(state["params"])
+        return state
+
+    return train_step, init_extra

@@ -1,0 +1,88 @@
+"""Pipeline parallelism: GPipe-style microbatch schedule in shard_map.
+
+The paper's PP knob, realized natively: stages live on a 'pipe' mesh axis,
+activations hand off stage-to-stage with ``lax.ppermute``, and the classic
+(n_micro + n_stages - 1) schedule — including the bubble — falls out of the
+rotation loop.  Generic over the per-stage function, so any layer stack
+(dense/MoE/SSM) can be cut into stages.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def pipeline_forward(stage_fn: Callable, mesh: Mesh, axis: str = "pipe"):
+    """Build a pipelined forward over ``n_stages`` = mesh.shape[axis].
+
+    stage_fn(stage_params, x) -> y : one stage's computation.
+    Returns f(stage_params_stacked, microbatches) -> outputs where
+      stage_params_stacked : pytree with leading dim n_stages,
+      microbatches         : (n_micro, mb, ...) input microbatches,
+      outputs              : (n_micro, mb, ...) final-stage outputs.
+    """
+    n_stages = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+
+    def pipelined(stage_params, microbatches):
+        n_micro = microbatches.shape[0]
+        my_stage = jax.lax.axis_index(axis)
+        total = n_micro + n_stages - 1
+        perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+        carry_in = jnp.zeros_like(microbatches[0])
+        outputs = jnp.zeros((n_micro,) + microbatches.shape[1:],
+                            microbatches.dtype)
+
+        def tick(t, state):
+            carry_in, outputs = state
+            # stage 0 ingests microbatch t (when one remains); other stages
+            # consume the activation handed off by the previous stage
+            mb_idx = jnp.clip(t, 0, n_micro - 1)
+            x_in = jnp.where(my_stage == 0, microbatches[mb_idx], carry_in)
+            y = stage_fn(stage_params, x_in)
+            # the last stage emits a finished microbatch (t - n_stages + 1)
+            out_idx = jnp.clip(t - n_stages + 1, 0, n_micro - 1)
+            emit = jnp.logical_and(my_stage == n_stages - 1, t >= n_stages - 1)
+            outputs = jax.lax.cond(
+                emit,
+                lambda o: jax.lax.dynamic_update_index_in_dim(o, y, out_idx, 0),
+                lambda o: o,
+                outputs)
+            carry_in = jax.lax.ppermute(y, axis, perm)
+            return (carry_in, outputs)
+
+        carry_in, outputs = jax.lax.fori_loop(0, total, tick, (carry_in, outputs))
+        return outputs
+
+    # stage params are sharded along the pipe axis (one stage per rank);
+    # microbatches are replicated in, outputs replicated out (last stage
+    # broadcasts its result slice).
+    in_specs = (P(axis), P())
+    out_specs = P()
+
+    def wrapper(stage_params_stacked, microbatches):
+        f = shard_map(
+            lambda sp, mb: _strip_leading(pipelined, sp, mb),
+            mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False)
+        return f(stage_params_stacked, microbatches)
+
+    def _strip_leading(fn, sp, mb):
+        sp = jax.tree.map(lambda a: a[0], sp)  # (1, ...) local slice -> (...)
+        out = fn(sp, mb)
+        # every stage returns an `outputs` buffer but only the last stage
+        # wrote real values (others hold zeros) — psum reconstitutes it
+        # replicated, matching out_specs=P().
+        return jax.lax.psum(out, axis)
+
+    return wrapper
+
+
+def pipeline_bubble_fraction(n_micro: int, n_stages: int) -> float:
+    """The GPipe bubble: (S-1) / (M + S - 1)."""
+    return (n_stages - 1) / (n_micro + n_stages - 1)

@@ -1,0 +1,152 @@
+"""Logical-axis sharding: the bridge between model code and mesh layout.
+
+Model code annotates every parameter and key activation with *logical* axes
+('embed', 'ff', 'vocab', 'batch', ...).  A ``ShardingPlan`` maps logical axes
+to mesh axes through an ordered rule table with divisibility-aware fallbacks,
+so the same model definition runs on 1 CPU device, a 16x16 pod, or a
+2x16x16 multi-pod mesh without edits.
+
+This realizes the paper's Workload knobs on real hardware: DP (batch over
+('pod','data')), Weight-Sharded/ZeRO (embed-dim over 'data'), TP (ff/heads/
+vocab/experts over 'model'), SP (residual-stream sequence dim over 'model'),
+EP (experts over 'model').
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Order in which logical axes get first pick of mesh axes.  Earlier entries
+# claim 'model' before later ones can.
+_PRIORITY = (
+    "expert", "ff", "vocab", "q_heads", "kv_heads", "d_inner", "ssm_heads",
+    "batch", "kv_seq", "moe_groups", "seq", "embed", "ssm_head_dim", "head_dim",
+)
+
+
+def _default_rules(fsdp: bool, sp: bool) -> dict[str, list[tuple[str, ...]]]:
+    """logical axis -> candidate mesh-axis tuples, best first."""
+    rules: dict[str, list[tuple[str, ...]]] = {
+        "expert": [("model",)],
+        "ff": [("model",)],
+        "vocab": [("model",)],
+        "q_heads": [("model",)],
+        "kv_heads": [("model",)],
+        "d_inner": [("model",)],
+        "ssm_heads": [("model",)],
+        # chunk-major token groups: model (seq chunks) is the MAJOR axis
+        "moe_groups": [("model", "pod", "data"), ("model", "data"),
+                       ("model",), ("pod", "data"), ("data",)],
+        "kv_seq": [("data", "model"), ("model",)],
+        "batch": [("pod", "data"), ("data",)],
+        "seq": [("model",)] if sp else [],
+        "embed": [("data",)] if fsdp else [],
+        "ssm_head_dim": [("model",)],
+        "head_dim": [],
+    }
+    return rules
+
+
+@dataclass(frozen=True)
+class ShardingPlan:
+    """Maps logical axes to a concrete mesh."""
+
+    axis_sizes: dict[str, int] = field(default_factory=dict)  # mesh axis -> size
+    fsdp: bool = True            # ZeRO-style weight sharding over 'data'
+    sp: bool = True              # sequence parallelism on the residual stream
+    rules: dict[str, list[tuple[str, ...]]] | None = None
+
+    def _rules(self) -> dict[str, list[tuple[str, ...]]]:
+        return self.rules if self.rules is not None else _default_rules(self.fsdp, self.sp)
+
+    # ------------------------------------------------------------------
+    def spec(self, axes: Sequence[str | None], shape: Sequence[int] | None = None) -> P:
+        """Build a PartitionSpec for a tensor with the given logical axes.
+
+        Mesh axes are assigned greedily in _PRIORITY order, subject to:
+        (i) each mesh axis used at most once per tensor, and (ii) the dim
+        size (when known) divisible by the mesh-axis product.
+        """
+        rules = self._rules()
+        n = len(axes)
+        assignment: list[tuple[str, ...] | None] = [None] * n
+        used: set[str] = set()
+        order = sorted(
+            range(n),
+            key=lambda i: _PRIORITY.index(axes[i]) if axes[i] in _PRIORITY else len(_PRIORITY),
+        )
+        for i in order:
+            name = axes[i]
+            if name is None or name not in rules:
+                continue
+            for option in rules[name]:
+                opt = tuple(a for a in option if a in self.axis_sizes)
+                if not opt or any(a in used for a in opt):
+                    continue
+                prod = 1
+                for a in opt:
+                    prod *= self.axis_sizes[a]
+                if prod <= 1:
+                    continue
+                if shape is not None and shape[i] % prod != 0:
+                    continue
+                assignment[i] = opt
+                used.update(opt)
+                break
+        parts = [
+            (a if a is None or len(a) > 1 else a[0]) for a in assignment
+        ]
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    # ------------------------------------------------------------------
+    def constrain(self, x: jax.Array, axes: Sequence[str | None]) -> jax.Array:
+        """with_sharding_constraint against this plan (no-op on a null plan)."""
+        if not self.axis_sizes:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.spec(axes, x.shape))
+
+    def can_shard(self, axis: str, size: int) -> bool:
+        """Would `axis` of this size actually get sharded (ignoring siblings)?"""
+        for option in self._rules().get(axis, []):
+            opt = tuple(a for a in option if a in self.axis_sizes)
+            if not opt:
+                continue
+            prod = 1
+            for a in opt:
+                prod *= self.axis_sizes[a]
+            if prod > 1 and size % prod == 0:
+                return True
+        return False
+
+
+NULL_PLAN = ShardingPlan(axis_sizes={}, fsdp=False, sp=False)
+
+
+def plan_for_mesh(mesh: Mesh | None, *, fsdp: bool = True, sp: bool = True,
+                  rules: dict[str, list[tuple[str, ...]]] | None = None) -> ShardingPlan:
+    if mesh is None:
+        return NULL_PLAN
+    return ShardingPlan(
+        axis_sizes=dict(zip(mesh.axis_names, mesh.devices.shape)),
+        fsdp=fsdp, sp=sp, rules=rules,
+    )
+
+
+def tree_specs(plan: ShardingPlan, axes_tree, shape_tree):
+    """Map a pytree of logical-axes tuples + shapes to PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes, sds: plan.spec(axes, sds.shape),
+        axes_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def tree_shardings(mesh: Mesh, specs_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,45 @@
+"""Serving entry points: prefill_step / serve_step factories.
+
+These are the functions the dry-run lowers for the inference cells
+(``prefill_32k`` lowers prefill_step; ``decode_32k``/``long_500k`` lower
+serve_step — one new token against a seq_len KV cache).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec
+from repro.models import model as M
+from repro.parallel.sharding import NULL_PLAN, ShardingPlan
+
+
+def make_prefill_step(spec: ArchSpec, plan: ShardingPlan = NULL_PLAN,
+                      compute_dtype=jnp.bfloat16):
+    def prefill_step(params, inputs, caches):
+        return M.prefill(params, inputs, caches, spec, plan, compute_dtype=compute_dtype)
+    return prefill_step
+
+
+def make_serve_step(spec: ArchSpec, plan: ShardingPlan = NULL_PLAN,
+                    compute_dtype=jnp.bfloat16):
+    def serve_step(params, caches, inputs, pos):
+        return M.decode_step(params, caches, inputs, pos, spec, plan, compute_dtype=compute_dtype)
+    return serve_step
+
+
+def decode_inputs_abstract(spec: ArchSpec, batch: int, compute_dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for one decode step's new-token inputs."""
+    if spec.frontend == "tokens":
+        tok = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    else:
+        tok = jax.ShapeDtypeStruct((batch, spec.d_model), compute_dtype)
+    return tok, jax.ShapeDtypeStruct((), jnp.int32)
+
+
+def prefill_inputs_abstract(spec: ArchSpec, batch: int, seq: int, compute_dtype=jnp.bfloat16):
+    if spec.frontend == "tokens":
+        return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    return jax.ShapeDtypeStruct((batch, seq, spec.d_model), compute_dtype)

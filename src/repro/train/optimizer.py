@@ -1,0 +1,116 @@
+"""AdamW with mixed precision + optional ZeRO-style sharded states.
+
+State layout (plain dict pytree, transparent to pjit/checkpointing):
+  params : compute-precision weights (bf16 on TPU)
+  master : fp32 master copy (omitted when param_dtype is fp32)
+  m, v   : fp32 moments — sharded exactly like params, which under the
+           Weight-Sharded plan means optimizer state is ZeRO-partitioned
+  step   : int32
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    min_lr_ratio: float = 0.1
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def lr_schedule(cfg: OptConfig, step):
+    """Linear warmup -> cosine decay to min_lr_ratio * lr."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    frac = jnp.clip((step - cfg.warmup_steps) / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio * cfg.lr + 0.5 * (1 - cfg.min_lr_ratio) * cfg.lr * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_state(params, param_dtype=jnp.float32) -> dict[str, Any]:
+    f32 = lambda t: jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), t)
+    state = {
+        "params": jax.tree.map(lambda a: a.astype(param_dtype), params),
+        "m": f32(params),
+        "v": f32(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if param_dtype != jnp.float32:
+        state["master"] = jax.tree.map(lambda a: a.astype(jnp.float32), params)
+    return state
+
+
+def abstract_state(abstract_params, param_dtype=jnp.float32):
+    sds = lambda a, dt: jax.ShapeDtypeStruct(a.shape, dt)
+    state = {
+        "params": jax.tree.map(lambda a: sds(a, param_dtype), abstract_params),
+        "m": jax.tree.map(lambda a: sds(a, jnp.float32), abstract_params),
+        "v": jax.tree.map(lambda a: sds(a, jnp.float32), abstract_params),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if param_dtype != jnp.float32:
+        state["master"] = jax.tree.map(lambda a: sds(a, jnp.float32), abstract_params)
+    return state
+
+
+def state_axes(param_axes_tree, param_dtype=jnp.float32):
+    """Logical-axes tree mirroring the state (for ShardingPlan.spec)."""
+    state = {
+        "params": param_axes_tree,
+        "m": param_axes_tree,
+        "v": param_axes_tree,
+        "step": (),
+    }
+    if param_dtype != jnp.float32:
+        state["master"] = param_axes_tree
+    return state
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(a.astype(jnp.float32))) for a in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def apply_updates(state: dict[str, Any], grads, cfg: OptConfig) -> tuple[dict[str, Any], dict[str, Any]]:
+    """One AdamW step.  grads: tree matching params (any float dtype)."""
+    g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    gnorm = global_norm(g32)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) if cfg.grad_clip else 1.0
+    g32 = jax.tree.map(lambda g: g * scale, g32)
+
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    master = state.get("master", state["params"])
+    new_m = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g, state["m"], g32)
+    new_v = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g, state["v"], g32)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        return p - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32))
+
+    new_master = jax.tree.map(upd, master, new_m, new_v)
+    param_dtype = jax.tree.leaves(state["params"])[0].dtype
+    new_state = dict(state)
+    new_state["m"], new_state["v"], new_state["step"] = new_m, new_v, step
+    if "master" in state:
+        new_state["master"] = new_master
+        new_state["params"] = jax.tree.map(lambda a: a.astype(param_dtype), new_master)
+    else:
+        new_state["params"] = new_master
+    return new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,212 @@
+"""Multi-device behaviours (subprocess: device count is locked at jax init).
+
+Covers: GPipe pipeline correctness, compressed all-reduce numerics, sharded
+train step == single-device train step, elastic checkpoint resharding.
+"""
+from __future__ import annotations
+
+import pytest
+
+from helpers import run_with_devices
+
+
+@pytest.mark.slow
+def test_pipeline_matches_sequential():
+    out = run_with_devices(4, """
+        import jax, jax.numpy as jnp
+        from repro.launch.mesh import make_mesh
+        from repro.parallel.pipeline import pipeline_forward
+        mesh = make_mesh((4,), ("pipe",))
+        def stage_fn(p, x):
+            return jnp.tanh(x @ p["w"] + p["b"])
+        rng = jax.random.PRNGKey(0); d = 16
+        params = {"w": jax.random.normal(rng, (4, d, d)) * 0.5,
+                  "b": jnp.zeros((4, d))}
+        mbs = jax.random.normal(jax.random.PRNGKey(1), (8, 4, d))
+        pf = pipeline_forward(stage_fn, mesh, "pipe")
+        with mesh:
+            out = jax.jit(pf)(params, mbs)
+        ref = mbs
+        for i in range(4):
+            ref = jnp.tanh(ref @ params["w"][i] + params["b"][i])
+        err = float(jnp.max(jnp.abs(out - ref)))
+        assert err < 1e-5, err
+        print("OK", err)
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_compressed_psum_numerics_and_error_feedback():
+    out = run_with_devices(4, """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.launch.mesh import make_mesh
+        from repro.parallel.compression import compressed_psum, init_error_state, wire_bytes
+        mesh = make_mesh((4,), ("dp",))
+        g_local = jax.random.normal(jax.random.PRNGKey(0), (4, 64, 64))
+
+        def f(g, e):
+            out, err = compressed_psum({"w": g}, "dp", {"w": e}, bits=8)
+            return out["w"], err["w"]
+
+        sf = shard_map(f, mesh=mesh, in_specs=(P("dp"), P("dp")),
+                       out_specs=(P("dp"), P("dp")), check_rep=False)
+        e0 = jnp.zeros_like(g_local)
+        red, e1 = sf(g_local, e0)
+        true_mean = jnp.mean(g_local, axis=0, keepdims=True)
+        red_any = red[0:1]
+        rel = float(jnp.max(jnp.abs(red_any - true_mean)) / jnp.max(jnp.abs(true_mean)))
+        assert rel < 0.05, rel          # 8-bit quantization error bound
+        # error feedback: residual equals what quantization dropped
+        assert float(jnp.max(jnp.abs(e1))) > 0
+        comp, full = wire_bytes({"w": g_local[0]})
+        assert comp * 3.5 < full
+        print("OK", rel)
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_train_step_matches_single_device():
+    out = run_with_devices(4, """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import ARCHS, reduced
+        from repro.launch.mesh import make_mesh
+        from repro.parallel.sharding import plan_for_mesh, NULL_PLAN
+        from repro.train.train_step import RunConfig, init_train_state, make_train_step
+        spec = reduced(ARCHS["qwen2-1.5b"])
+        cfg = RunConfig(remat="none")
+        rng = jax.random.PRNGKey(0)
+        state0 = init_train_state(rng, spec, cfg)
+        batch = {"inputs": np.random.default_rng(0).integers(0, spec.vocab_size, (8, 32)).astype(np.int32),
+                 "labels": np.random.default_rng(1).integers(0, spec.vocab_size, (8, 32)).astype(np.int32)}
+        # single device
+        s1, m1 = jax.jit(make_train_step(spec, NULL_PLAN, cfg))(state0, batch)
+        # 2x2 mesh
+        mesh = make_mesh((2, 2), ("data", "model"))
+        plan = plan_for_mesh(mesh)
+        with mesh:
+            s2, m2 = jax.jit(make_train_step(spec, plan, cfg))(state0, batch)
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-4)
+        l1 = jax.tree.leaves(s1["params"])[3]
+        l2 = jax.tree.leaves(s2["params"])[3]
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-3, atol=1e-5)
+        print("OK", float(m1["loss"]), float(m2["loss"]))
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_elastic_checkpoint_reshard():
+    out = run_with_devices(4, """
+        import tempfile, jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.ckpt.checkpoint import save, restore
+        from repro.launch.mesh import make_mesh
+        tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+                "b": jnp.ones((8,), jnp.float32)}
+        d = tempfile.mkdtemp()
+        save(d, tree, step=5)
+        # restore onto a 4-way mesh with a different layout
+        mesh = make_mesh((4,), ("data",))
+        sh = {"w": NamedSharding(mesh, P("data", None)),
+              "b": NamedSharding(mesh, P(None))}
+        restored, step = restore(d, tree, shardings=sh)
+        assert step == 5
+        np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+        assert restored["w"].sharding.spec == P("data", None)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_elastic_rescale_end_to_end():
+    """Train on a 4-device mesh, checkpoint, resume on a 2-device mesh
+    (simulating the loss of half the cluster), losses keep decreasing."""
+    out = run_with_devices(4, """
+        import tempfile, jax, jax.numpy as jnp, numpy as np
+        from repro.configs import ARCHS, reduced
+        from repro.ckpt.checkpoint import save, restore
+        from repro.launch.mesh import make_mesh
+        from repro.parallel.sharding import plan_for_mesh, tree_shardings
+        from repro.train.train_step import (RunConfig, init_train_state,
+                                            make_train_step, train_state_axes)
+        from repro.data.pipeline import DataConfig, SyntheticLM
+
+        spec = reduced(ARCHS["qwen2-1.5b"], n_layers=2)
+        cfg = RunConfig(remat="none")
+        data = SyntheticLM(spec, DataConfig(8, 32, seed=0))
+        ckdir = tempfile.mkdtemp()
+
+        # phase 1: 2x2 mesh
+        mesh = make_mesh((2, 2), ("data", "model"))
+        plan = plan_for_mesh(mesh)
+        state = init_train_state(jax.random.PRNGKey(0), spec, cfg)
+        step = jax.jit(make_train_step(spec, plan, cfg))
+        with mesh:
+            for i in range(5):
+                state, m = step(state, data.batch_at(i))
+        save(ckdir, state, step=5)
+        l5 = float(m["loss"])
+
+        # phase 2: "lose" half the devices -> 2x1 mesh, restore + continue
+        mesh2 = make_mesh((2, 1), ("data", "model"))
+        plan2 = plan_for_mesh(mesh2)
+        ax = train_state_axes(spec, cfg)
+        specs = jax.tree.map(lambda a, s: plan2.spec(a, np.shape(s)), ax, state,
+                             is_leaf=lambda x: isinstance(x, tuple) and all(
+                                 isinstance(e, (str, type(None))) for e in x))
+        sh = tree_shardings(mesh2, specs)
+        state2, start = restore(ckdir, state, shardings=sh)
+        assert start == 5
+        step2 = jax.jit(make_train_step(spec, plan2, cfg))
+        with mesh2:
+            for i in range(start, start + 5):
+                state2, m2 = step2(state2, data.batch_at(i))
+        assert int(state2["step"]) == 10
+        assert np.isfinite(float(m2["loss"]))
+        print("OK", l5, float(m2["loss"]))
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_dp_explicit_with_gradient_compression():
+    """Explicit-DP shard_map train step: compressed(int8+EF) gradients track
+    the uncompressed run; loss decreases in both."""
+    out = run_with_devices(4, """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import ARCHS, reduced
+        from repro.launch.mesh import make_mesh
+        from repro.parallel.dp_explicit import make_dp_train_step
+        from repro.train.train_step import RunConfig, init_train_state
+        from repro.train import optimizer as opt
+        from repro.data.pipeline import DataConfig, SyntheticLM
+
+        spec = reduced(ARCHS["qwen2-1.5b"], n_layers=2)
+        cfg = RunConfig(remat="none", opt=opt.OptConfig(lr=6e-3, warmup_steps=2))
+        mesh = make_mesh((4,), ("data",))
+        data = SyntheticLM(spec, DataConfig(8, 32, seed=0))
+
+        runs = {}
+        for bits in (0, 8):
+            step, init_extra = make_dp_train_step(spec, mesh, cfg, compress_bits=bits)
+            state = init_extra(init_train_state(jax.random.PRNGKey(0), spec, cfg))
+            jstep = jax.jit(step)
+            losses = []
+            with mesh:
+                for i in range(25):
+                    state, m = jstep(state, data.batch_at(i))
+                    losses.append(float(m["loss"]))
+            runs[bits] = losses
+        l0, l8 = runs[0], runs[8]
+        assert np.mean(l0[-5:]) < np.mean(l0[:5]) - 0.02, l0
+        assert np.mean(l8[-5:]) < np.mean(l8[:5]) - 0.02, l8
+        # compressed training tracks uncompressed within a loose band
+        assert abs(np.mean(l8[-5:]) - np.mean(l0[-5:])) < 0.15
+        print("OK", np.mean(l0[-5:]), np.mean(l8[-5:]))
+    """)
+    assert "OK" in out

@@ -1,0 +1,169 @@
+"""Beyond-paper perf features: chunked CE, save_kv remat, MoE dispatch
+semantics, analyzer slice accounting."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.core.hlo_analysis import HloCostModel
+from repro.models import model as M
+from repro.models import moe as moem
+from repro.models.layers import init_tree
+from repro.parallel.sharding import NULL_PLAN
+from repro.train.loss import chunked_cross_entropy, cross_entropy
+from repro.train.train_step import RunConfig, init_train_state, make_train_step
+
+
+def _batch(spec, b, s, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"inputs": rng.integers(0, spec.vocab_size, (b, s)).astype(np.int32),
+            "labels": rng.integers(0, spec.vocab_size, (b, s)).astype(np.int32)}
+
+
+def test_chunked_ce_matches_dense():
+    b, s, d, v = 2, 32, 16, 64
+    rng = jax.random.PRNGKey(0)
+    hidden = jax.random.normal(rng, (b, s, d))
+    w = jax.random.normal(jax.random.PRNGKey(1), (d, v)) * 0.2
+    labels = jax.random.randint(rng, (b, s), 0, v)
+    dense = cross_entropy(hidden @ w, labels)
+    for chunk in (4, 8, 32):
+        ch = chunked_cross_entropy(hidden, lambda h: h @ w, labels, chunk=chunk)
+        np.testing.assert_allclose(float(dense), float(ch), rtol=1e-6)
+
+
+def test_chunked_ce_gradients_match():
+    b, s, d, v = 2, 16, 8, 32
+    hidden = jax.random.normal(jax.random.PRNGKey(0), (b, s, d))
+    w = jax.random.normal(jax.random.PRNGKey(1), (d, v)) * 0.2
+    labels = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, v)
+    g1 = jax.grad(lambda w_: cross_entropy(hidden @ w_, labels))(w)
+    g2 = jax.grad(lambda w_: chunked_cross_entropy(hidden, lambda h: h @ w_, labels, chunk=4))(w)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-5, atol=1e-7)
+
+
+@pytest.mark.parametrize("knobs", [
+    dict(remat="save_kv"),
+    dict(remat="full", loss_chunk=8),
+    dict(remat="save_kv", loss_chunk=8, microbatches=2),
+])
+def test_train_step_variants_match_plain(knobs):
+    """Every perf knob must be numerically equivalent to the plain step."""
+    spec = reduced(ARCHS["qwen2-1.5b"], n_layers=2)
+    batch = _batch(spec, 4, 32)
+    rng = jax.random.PRNGKey(0)
+    c0 = RunConfig(remat="none")
+    c1 = RunConfig(remat="none").with_(**knobs)
+    s0, m0 = jax.jit(make_train_step(spec, cfg=c0))(init_train_state(rng, spec, c0), batch)
+    s1, m1 = jax.jit(make_train_step(spec, cfg=c1))(init_train_state(rng, spec, c1), batch)
+    np.testing.assert_allclose(float(m0["loss"]), float(m1["loss"]), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(s0["params"]), jax.tree.leaves(s1["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=1e-6)
+
+
+def test_moe_capacity_drops_and_aux():
+    spec = reduced(ARCHS["granite-moe-3b-a800m"])
+    p = init_tree(jax.random.PRNGKey(0), moem.moe_defs(spec))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, spec.d_model))
+    # tight capacity must drop tokens; generous must not
+    logits = jnp.einsum("bsd,de->bse", x.reshape(2, 64, -1), p["router"]).astype(jnp.float32)
+    _, _, aux_tight = moem._dispatch_tensors(
+        logits.reshape(2, 64, -1).reshape(2 * 64 // 64, 64, spec.n_experts), spec.top_k,
+        spec.n_experts, cap=8)
+    _, _, aux_loose = moem._dispatch_tensors(
+        logits.reshape(2 * 64 // 64, 64, spec.n_experts), spec.top_k,
+        spec.n_experts, cap=256)
+    assert float(aux_tight["drop_frac"]) > 0.0
+    assert float(aux_loose["drop_frac"]) == 0.0
+    assert float(aux_loose["lb_loss"]) >= 1.0  # >= E * (1/E) at balance
+
+
+def test_moe_group_size_alignment_fallback():
+    """non-divisible group sizes fall back cleanly (tg halves until it
+    divides the sequence)."""
+    spec = reduced(ARCHS["granite-moe-3b-a800m"])
+    p = init_tree(jax.random.PRNGKey(0), moem.moe_defs(spec))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, spec.d_model))  # 24 % 16 != 0
+    y, aux = moem.moe_apply(p, x, spec, NULL_PLAN, group_size=16)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_dispatch_mask_stop_gradient():
+    """routing gradients flow via combine only: grads wrt router exist, and
+    the dispatch path contributes none."""
+    spec = reduced(ARCHS["granite-moe-3b-a800m"])
+    p = init_tree(jax.random.PRNGKey(0), moem.moe_defs(spec))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, spec.d_model))
+
+    def f(params):
+        y, _ = moem.moe_apply(params, x, spec, NULL_PLAN, capacity_factor=8.0)
+        return jnp.sum(y * y)
+
+    g = jax.grad(f)(p)
+    assert float(jnp.max(jnp.abs(g["router"]))) > 0  # via combine weights
+    assert float(jnp.max(jnp.abs(g["w_down"]))) > 0
+
+
+DUS_SNIPPET = """\
+HloModule t
+
+ENTRY %main (a: f32[64,64], u: f32[1,64]) -> f32[64,64] {
+  %a = f32[64,64] parameter(0)
+  %u = f32[1,64] parameter(1)
+  %z = s32[] constant(0)
+  ROOT %d = f32[64,64] dynamic-update-slice(%a, %u, %z, %z)
+}
+"""
+
+
+def test_analyzer_dus_slice_accounting():
+    t = HloCostModel(DUS_SNIPPET).analyze()
+    # 2x the update slice (read update + write region), NOT the full buffer
+    assert t.bytes_fused == 2 * 64 * 4
+
+
+def test_flash_bwd_checkpoint_grads_finite():
+    """gradient flows through the chunk-checkpointed flash scan."""
+    from repro.models.attention import flash_attention_ref
+    b, s, h, hd = 1, 128, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd))
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    pos = jnp.arange(s, dtype=jnp.int32)
+
+    g = jax.grad(lambda q_: jnp.sum(flash_attention_ref(q_, k, v, pos, kv_chunk=32) ** 2))(q)
+    assert bool(jnp.isfinite(g).all())
+    # and matches dense-attention gradients
+    from repro.kernels.ref import attention_ref
+    qr = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+
+    def dense(q_):
+        qq = q_.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+        o = attention_ref(qq, kr, vr, causal=True)
+        return jnp.sum(o.reshape(b, h, s, hd).transpose(0, 2, 1, 3) ** 2)
+
+    gd = jax.grad(dense)(q)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gd), rtol=2e-4, atol=2e-5)
+
+
+def test_engine_embeddings_frontend():
+    from repro.serve.engine import Engine
+    spec = reduced(ARCHS["musicgen-medium"], n_layers=2)
+    params = M.init_params(jax.random.PRNGKey(0), spec)
+    # embeddings-frontend decode takes (B, D) embeddings per step; the
+    # engine's token path is for 'tokens' archs — drive decode directly.
+    b, s = 2, 8
+    caches = M.init_caches(spec, b, 16, dtype=jnp.float32)
+    prompt = jax.random.normal(jax.random.PRNGKey(1), (b, s, spec.d_model)) * 0.1
+    logits, caches = M.prefill(params, prompt, caches, spec, compute_dtype=jnp.float32)
+    emb = jax.random.normal(jax.random.PRNGKey(2), (b, spec.d_model)) * 0.1
+    logits2, _ = M.decode_step(params, caches, emb, s, spec, compute_dtype=jnp.float32)
+    assert logits2.shape == (b, spec.vocab_size)
+    assert bool(jnp.isfinite(logits2).all())

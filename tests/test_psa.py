@@ -1,0 +1,99 @@
+"""PsA schema + PSS properties (hypothesis-driven)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.psa import (Constraint, Parameter, ParameterSet, paper_psa,
+                            pow2_range, table1_psa)
+from repro.core.space import DesignSpace, constrained_parallelization_count
+
+
+def test_paper_table1_counts():
+    # "even with just four parallelization dimensions ... 286 combinations"
+    assert constrained_parallelization_count(1024, 4) == 286
+    # full Table-1 space: 7.69e13
+    total = (constrained_parallelization_count(1024, 4) * 2  # weight sharded
+             * 2 * 4 ** 4 * 32 * 2                            # collective stack
+             * 3 ** 4 * 3 ** 4 * 5 ** 4)                      # network stack
+    assert abs(total - 7.69e13) / 7.69e13 < 0.01
+
+
+def test_cardinality_and_slots():
+    ps = paper_psa(1024)
+    ds = DesignSpace(ps)
+    assert ds.n_genes() == 4 + 1 + 4 + 1 + 1 + 4 + 4 + 4
+    assert ps.cardinality() > 1e12
+
+
+def test_restrict_pins_other_stacks():
+    ps = paper_psa(1024)
+    defaults = dict(sched_policy="lifo", coll_algo=("ring",) * 4, chunks=4,
+                    multidim_coll="baseline", topology=("ring",) * 4,
+                    npus_per_dim=(4, 4, 8, 8), bw_per_dim=(100,) * 4)
+    w = ps.restrict({"workload"}, defaults)
+    ds = DesignSpace(w)
+    assert {g.param for g in ds.genes} == {"dp", "pp", "sp", "weight_sharded"}
+    cfg = ds.sample(np.random.default_rng(0))
+    assert cfg["topology"] == ("ring",) * 4
+    assert ds.is_valid(cfg)
+    with pytest.raises(KeyError):
+        ps.restrict({"workload"}, {})  # missing defaults must be an error
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_sample_always_valid(seed):
+    ds = DesignSpace(paper_psa(1024))
+    cfg = ds.sample(np.random.default_rng(seed))
+    assert ds.is_valid(cfg)
+    assert cfg["dp"] * cfg["sp"] * cfg["pp"] <= 1024
+    assert np.prod(cfg["npus_per_dim"]) == 1024
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_encode_decode_roundtrip(seed):
+    ds = DesignSpace(paper_psa(1024))
+    cfg = ds.sample(np.random.default_rng(seed))
+    assert ds.decode(ds.encode(cfg)) == cfg
+    norm = ds.normalize(ds.encode(cfg))
+    assert ((0.0 <= norm) & (norm <= 1.0)).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_mutate_crossover_stay_valid(seed):
+    rng = np.random.default_rng(seed)
+    ds = DesignSpace(paper_psa(1024))
+    a, b = ds.sample(rng), ds.sample(rng)
+    assert ds.is_valid(ds.mutate(a, rng))
+    assert ds.is_valid(ds.crossover(a, b, rng))
+
+
+def test_repair_fixes_product_constraint():
+    ds = DesignSpace(paper_psa(1024))
+    rng = np.random.default_rng(0)
+    bad = ds.sample(rng)
+    bad = dict(bad, npus_per_dim=(16, 16, 16, 16))  # product 65536 != 1024
+    assert not ds.is_valid(bad)
+    fixed = ds.repair(bad, rng)
+    assert ds.is_valid(fixed)
+
+
+def test_duplicate_param_names_rejected():
+    with pytest.raises(ValueError):
+        ParameterSet([Parameter("x", "workload", (1, 2)),
+                      Parameter("x", "network", (3, 4))])
+
+
+def test_predicate_constraint():
+    ps = ParameterSet(
+        [Parameter("a", "workload", (1, 2, 4)), Parameter("b", "workload", (1, 2, 4))],
+        [Constraint("predicate", fn=lambda c: c["a"] >= c["b"], name="a>=b")],
+    )
+    ds = DesignSpace(ps)
+    for s in range(20):
+        cfg = ds.sample(np.random.default_rng(s))
+        assert cfg["a"] >= cfg["b"]

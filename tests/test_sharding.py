@@ -1,0 +1,78 @@
+"""ShardingPlan rule-table behaviour: divisibility fallbacks, priority,
+uniqueness — the logic the whole dry-run stands on."""
+from __future__ import annotations
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import NULL_PLAN, ShardingPlan
+
+POD = ShardingPlan(axis_sizes={"data": 16, "model": 16})
+MULTI = ShardingPlan(axis_sizes={"pod": 2, "data": 16, "model": 16})
+
+
+def test_ff_takes_model():
+    assert POD.spec(("embed", "ff"), (4096, 11008)) == P("data", "model")
+
+
+def test_nondivisible_falls_back_to_none():
+    # 12 q heads can't shard over 16
+    s = POD.spec(("embed", "q_heads", "head_dim"), (1536, 12, 128))
+    assert s == P("data",)  # trailing Nones trimmed
+
+
+def test_mesh_axis_used_once():
+    # expert takes 'model'; ff must NOT reuse it
+    s = POD.spec(("expert", "embed", "ff"), (64, 2048, 1408))
+    assert s == P("model", "data")
+
+
+def test_expert_nondivisible_frees_model_for_ff():
+    # granite: 40 experts % 16 != 0 -> ff gets model instead
+    s = POD.spec(("expert", "embed", "ff"), (40, 1536, 512))
+    assert s == P(None, "data", "model")
+
+
+def test_batch_spans_pod_and_data():
+    s = MULTI.spec(("batch", None, "embed"), (256, 4096, 1024))
+    assert s == P(("pod", "data"),)  # embed falls back: data used by batch
+
+
+def test_batch_unshardable_gives_seq_to_kv():
+    # long_500k: batch=1 -> kv_seq gets (data, model)
+    s = POD.spec(("batch", "kv_seq", "kv_heads", "head_dim"), (1, 524288, 8, 128))
+    assert s == P(None, ("data", "model"))
+
+
+def test_batch_shardable_kv_seq_takes_model():
+    s = POD.spec(("batch", "kv_seq", "kv_heads", "head_dim"), (128, 32768, 7, 128))
+    assert s == P("data", "model")
+
+
+def test_can_shard():
+    assert POD.can_shard("q_heads", 32)
+    assert not POD.can_shard("q_heads", 12)
+    assert POD.can_shard("ff", 8960)
+    assert not NULL_PLAN.can_shard("ff", 8960)
+
+
+def test_null_plan_constrain_is_identity():
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    assert NULL_PLAN.constrain(x, ("batch", "embed")) is x
+
+
+def test_sp_toggle():
+    no_sp = ShardingPlan(axis_sizes={"data": 16, "model": 16}, sp=False)
+    assert POD.spec(("batch", "seq", "embed"), (256, 4096, 1024)) == P("data", "model")
+    assert no_sp.spec(("batch", "seq", "embed"), (256, 4096, 1024)) == P("data",)
+
+
+def test_fsdp_toggle():
+    no_fsdp = ShardingPlan(axis_sizes={"data": 16, "model": 16}, fsdp=False)
+    assert no_fsdp.spec(("embed", "ff"), (4096, 11008)) == P(None, "model")
+
+
+def test_moe_groups_model_major():
+    s = POD.spec(("moe_groups", None, None), (1024, 256, 4096))
+    assert s == P(("model", "data"),)

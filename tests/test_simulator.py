@@ -1,0 +1,250 @@
+"""Collective cost models, WTG, memory model, and event-sim invariants."""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS
+from repro.core.collectives import (collective_time_us,
+                                    multidim_collective_time_us)
+from repro.core.compute import SYSTEM_2_DEVICE, TPU_V5E, Device
+from repro.core.memory import fits, footprint
+from repro.core.rewards import evaluate
+from repro.core.simulator import SystemConfig, group_dims, simulate
+from repro.core.topology import (Network, TopoDim, build_network, system_1,
+                                 system_2, system_3, tpu_v5e_pod)
+from repro.core.workload import Parallelism, generate_trace
+
+DIM = TopoDim("ring", 8, 100.0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(size=st.floats(1e3, 1e12), algo=st.sampled_from(["ring", "direct", "rhd", "dbt"]),
+       kind=st.sampled_from(["all_reduce", "all_gather", "reduce_scatter", "all_to_all"]),
+       topo=st.sampled_from(["ring", "switch", "fc"]),
+       n=st.sampled_from([2, 4, 8, 16]))
+def test_collective_time_positive_and_monotone(size, algo, kind, topo, n):
+    d = TopoDim(topo, n, 200.0)
+    t1 = collective_time_us(kind, size, d, algo)
+    t2 = collective_time_us(kind, size * 2, d, algo)
+    assert t1 > 0
+    assert t2 >= t1  # monotone in message size
+
+
+def test_allreduce_costs_twice_reduce_scatter_bandwidth():
+    t_ar = collective_time_us("all_reduce", 1e9, DIM, "ring")
+    t_rs = collective_time_us("reduce_scatter", 1e9, DIM, "ring")
+    assert 1.8 < t_ar / t_rs < 2.2
+
+
+def test_bandwidth_scaling():
+    fast = TopoDim("ring", 8, 400.0)
+    slow = TopoDim("ring", 8, 100.0)
+    assert collective_time_us("all_reduce", 1e9, fast, "ring") < \
+        collective_time_us("all_reduce", 1e9, slow, "ring")
+
+
+def test_latency_vs_bandwidth_algorithms():
+    """Small messages favour latency-optimized algorithms (direct/RHD),
+    large messages favour ring — the paper's Experiment-2 observation."""
+    sw = TopoDim("switch", 16, 100.0)
+    small, large = 4e3, 4e9
+    t_small = {a: collective_time_us("all_reduce", small, sw, a)
+               for a in ("ring", "direct", "rhd")}
+    t_large = {a: collective_time_us("all_reduce", large, sw, a)
+               for a in ("ring", "direct", "rhd")}
+    assert t_small["rhd"] < t_small["ring"]
+    assert t_small["direct"] < t_small["ring"]
+    assert t_large["ring"] <= t_large["direct"] * 1.05
+
+
+def test_direct_on_fc_beats_direct_on_ring():
+    fc = TopoDim("fc", 8, 100.0)
+    ri = TopoDim("ring", 8, 100.0)
+    assert collective_time_us("all_reduce", 1e8, fc, "direct") < \
+        collective_time_us("all_reduce", 1e8, ri, "direct")
+
+
+def test_blueconnect_not_slower_hierarchical():
+    net = build_network(("ring", "switch"), (8, 8), (100, 100))
+    base = multidim_collective_time_us("all_reduce", 1e9, net, ("ring", "ring"),
+                                       chunks=4, mode="baseline")
+    bc = multidim_collective_time_us("all_reduce", 1e9, net, ("ring", "ring"),
+                                     chunks=4, mode="blueconnect")
+    assert bc <= base * 1.01
+
+
+def test_chunking_tradeoff():
+    """More chunks -> more latency overhead on a single dim."""
+    t1 = collective_time_us("all_reduce", 1e6, DIM, "ring", chunks=1)
+    t8 = collective_time_us("all_reduce", 1e6, DIM, "ring", chunks=8)
+    assert t8 >= t1
+
+
+# ---------------------------------------------------------------------------
+# topology / cost model
+# ---------------------------------------------------------------------------
+
+def test_table3_systems_build():
+    for net, n in ((system_1(), 512), (system_2(), 1024), (system_3(), 2048)):
+        assert net.n_npus == n
+        assert net.dollar_cost() > 0
+        assert net.bw_per_npu() > 0
+    assert tpu_v5e_pod().n_npus == 256
+
+
+def test_fc_costs_more_than_ring():
+    ring = build_network(("ring",), (8,), (100,))
+    fc = build_network(("fc",), (8,), (100,))
+    assert fc.dollar_cost() > ring.dollar_cost()
+
+
+# ---------------------------------------------------------------------------
+# WTG
+# ---------------------------------------------------------------------------
+
+def test_trace_flops_scale_with_model():
+    par = Parallelism(1024, dp=64, sp=4, pp=1)
+    small = generate_trace(ARCHS["gpt3-13b"], par, batch=1024, seq=2048)
+    large = generate_trace(ARCHS["gpt3-175b"], par, batch=1024, seq=2048)
+    assert large.total_flops() > 5 * small.total_flops()
+
+
+def test_trace_flops_match_6nd_order():
+    """Total fwd+bwd FLOPs across the cluster ~ 6*N*D for a dense model."""
+    spec = ARCHS["gpt3-13b"]
+    par = Parallelism(1024, dp=1024, sp=1, pp=1)  # pure DP: tp=1, no comm
+    tr = generate_trace(spec, par, batch=1024, seq=2048)
+    cluster_flops = tr.total_flops() * 1024  # per-NPU trace x NPUs
+    model_flops = 6 * spec.param_count() * 1024 * 2048
+    assert 0.6 < cluster_flops / model_flops < 1.7
+
+
+def test_tp_adds_collectives_dp_adds_grad_reduction():
+    spec = ARCHS["gpt3-13b"]
+    tp_trace = generate_trace(spec, Parallelism(64, dp=1, sp=1, pp=1), batch=64, seq=2048)
+    dp_trace = generate_trace(spec, Parallelism(64, dp=64, sp=1, pp=1), batch=64, seq=2048)
+    tp_colls = tp_trace.total_coll_bytes()
+    dp_colls = dp_trace.total_coll_bytes()
+    assert tp_colls.get("tp", 0) > 0 and "dp" not in tp_colls
+    assert dp_colls.get("dp", 0) > 0 and "tp" not in dp_colls
+    # DP gradient traffic ~ parameter bytes
+    assert dp_colls["dp"] > spec.param_count() * 1.5
+
+
+def test_moe_trace_has_all_to_all():
+    spec = ARCHS["moonshot-v1-16b-a3b"]
+    tr = generate_trace(spec, Parallelism(64, dp=4, sp=1, pp=1), batch=64, seq=2048)
+    assert any(o.coll == "all_to_all" for o in tr.ops if o.kind == "coll")
+
+
+# ---------------------------------------------------------------------------
+# memory model
+# ---------------------------------------------------------------------------
+
+def test_memory_gate():
+    spec = ARCHS["gpt3-175b"]
+    tight = Parallelism(1024, dp=1024, sp=1, pp=1)      # no model sharding
+    roomy = Parallelism(1024, dp=16, sp=4, pp=4, weight_sharded=True)
+    assert not fits(spec, tight, batch=1024, seq=2048)
+    assert fits(spec, roomy, batch=1024, seq=2048)
+
+
+def test_weight_sharding_reduces_params():
+    spec = ARCHS["gpt3-13b"]
+    base = footprint(spec, Parallelism(64, 8, 1, 1, False), batch=64, seq=2048)
+    zero = footprint(spec, Parallelism(64, 8, 1, 1, True), batch=64, seq=2048)
+    assert zero.params_gb < base.params_gb
+    assert zero.optimizer_gb < base.optimizer_gb * 1.01
+
+
+# ---------------------------------------------------------------------------
+# event simulator
+# ---------------------------------------------------------------------------
+
+def _sys(net: Network, policy="fifo") -> SystemConfig:
+    return SystemConfig(network=net, device=SYSTEM_2_DEVICE,
+                        coll_algo=("ring",) * len(net.dims), chunks=2,
+                        sched_policy=policy)
+
+
+def test_simulate_all_ops_finish_and_overlap_bounded():
+    spec = ARCHS["gpt3-13b"]
+    par = Parallelism(1024, dp=64, sp=4, pp=1)
+    tr = generate_trace(spec, par, batch=1024, seq=2048)
+    res = simulate(tr, _sys(system_2()), par)
+    assert res.makespan_us > 0
+    serial = res.compute_busy_us + sum(res.comm_busy_us.values())
+    assert res.makespan_us <= serial * 1.001          # overlap can't exceed serial
+    assert res.makespan_us >= res.compute_busy_us     # compute is on the critical path
+
+
+def test_simulator_deterministic():
+    spec = ARCHS["gpt3-13b"]
+    par = Parallelism(1024, dp=32, sp=8, pp=1)
+    tr = generate_trace(spec, par, batch=1024, seq=2048)
+    r1 = simulate(tr, _sys(system_2()), par)
+    r2 = simulate(tr, _sys(system_2()), par)
+    assert r1.makespan_us == r2.makespan_us
+
+
+def test_scheduling_policy_changes_schedule():
+    spec = ARCHS["gpt3-175b"]
+    par = Parallelism(1024, dp=64, sp=1, pp=1, weight_sharded=True)
+    tr = generate_trace(spec, par, batch=1024, seq=2048)
+    lifo = simulate(tr, _sys(system_2(), "lifo"), par)
+    fifo = simulate(tr, _sys(system_2(), "fifo"), par)
+    # same work, potentially different makespan; both must be sane
+    assert abs(lifo.compute_busy_us - fifo.compute_busy_us) < 1e-6
+    assert lifo.makespan_us > 0 and fifo.makespan_us > 0
+
+
+def test_group_dims_cover_parallelism():
+    par = Parallelism(1024, dp=16, sp=4, pp=2)  # tp = 8
+    g = group_dims(system_2(), par)
+    for grp, need in (("tp", 8), ("sp", 4), ("dp", 16), ("pp", 2)):
+        got = math.prod(d.npus for d in g[grp]) if g[grp] else 1
+        assert got == need, (grp, got, need)
+
+
+def test_evaluate_full_pipeline():
+    ev = evaluate(ARCHS["gpt3-13b"], Parallelism(1024, 64, 4, 1, True),
+                  _sys(system_2()), batch=1024, seq=2048)
+    assert ev.valid and ev.reward > 0 and ev.latency_ms > 0
+    bad = evaluate(ARCHS["gpt3-175b"], Parallelism(1024, 1024, 1, 1),
+                   _sys(system_2()), batch=1024, seq=2048)
+    assert not bad.valid and bad.reward == 0.0
+
+
+def test_decode_trace_small_messages():
+    """Decode-phase collectives are tiny (latency regime) vs prefill."""
+    spec = ARCHS["gpt3-175b"]
+    par = Parallelism(1024, dp=64, sp=4, pp=1, weight_sharded=True)
+    dec = generate_trace(spec, par, batch=64, seq=2048, mode="decode")
+    pre = generate_trace(spec, par, batch=64, seq=2048, mode="inference")
+    dec_tp = dec.total_coll_bytes().get("tp", 0)
+    pre_tp = pre.total_coll_bytes().get("tp", 0)
+    assert 0 < dec_tp < pre_tp / 100
+
+
+def test_serve_mode_evaluate():
+    from repro.core.rewards import evaluate as ev
+    r = ev(ARCHS["gpt3-13b"], Parallelism(1024, 64, 4, 1, True),
+           _sys(system_2()), batch=64, seq=2048, mode="serve")
+    assert r.valid and r.reward > 0
+    assert r.detail["decode_ms"] < r.detail["prefill_ms"]
+
+
+def test_mxu_granularity_efficiency():
+    """Pathological TP degrees inflate compute time (Fig-4 physics)."""
+    spec = ARCHS["gpt3-175b"]
+    sane = generate_trace(spec, Parallelism(1024, dp=256, sp=1, pp=1),
+                          batch=1024, seq=2048)   # tp=4
+    patho = generate_trace(spec, Parallelism(1024, dp=1, sp=1, pp=1),
+                           batch=1024, seq=2048)  # tp=1024
+    # per-NPU useful flops identical, but the pathological trace carries the
+    # MXU-underutilization inflation
+    assert patho.total_flops() > 3 * sane.total_flops()
