@@ -1,8 +1,9 @@
 """The paper's headline experiment, runnable at desk scale:
 full-stack vs single-stack DSE for GPT3-175B (Fig. 6), with all four agents
-compared (Fig. 10).
+compared (Fig. 10), driven by the batched evaluation engine.
 
     PYTHONPATH=src python examples/dse_full_stack.py [--steps 600]
+                                                     [--batch 32] [--workers 0]
 """
 import argparse
 import sys
@@ -18,6 +19,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=600)
     ap.add_argument("--system", default="system2", choices=["system1", "system2", "system3"])
+    ap.add_argument("--batch", type=int, default=32,
+                    help="population evaluated per agent round (1 = sequential)")
+    ap.add_argument("--workers", type=int, default=0,
+                    help=">1 fans each batch out to a process pool")
     args = ap.parse_args()
 
     scenarios = {
@@ -26,15 +31,19 @@ def main():
         "network-only": {"network"},
         "full-stack": None,
     }
-    print(f"== single-stack vs full-stack (GPT3-175B, {args.system}, GA) ==")
+    print(f"== single-stack vs full-stack (GPT3-175B, {args.system}, GA, "
+          f"batch={args.batch}) ==")
     best = {}
     for name, stacks in scenarios.items():
         ps = make_pset(args.system, stacks=stacks)
-        res = run_search(ps, make_env("gpt3-175b", args.system), "ga",
-                         steps=args.steps, seed=0)
+        with make_env("gpt3-175b", args.system) as env:
+            res = run_search(ps, env, "ga", steps=args.steps, seed=0,
+                             batch_size=args.batch, workers=args.workers)
         best[name] = res
         print(f"{name:16s} reward={res.best_reward:.3e} "
-              f"latency={res.best_latency_ms:9.1f} ms steps_to_peak={res.steps_to_peak}")
+              f"latency={res.best_latency_ms:9.1f} ms "
+              f"steps_to_peak={res.steps_to_peak} "
+              f"points_per_s={res.points_per_s:7.0f}")
     full = best["full-stack"].best_reward
     for name in scenarios:
         if name != "full-stack":
@@ -43,10 +52,12 @@ def main():
     print(f"\n== agent comparison (full stack, {args.steps} steps) ==")
     for agent in ("rw", "ga", "aco", "bo"):
         steps = min(args.steps, 200) if agent == "bo" else args.steps
-        res = run_search(make_pset(args.system), make_env("gpt3-175b", args.system),
-                         agent, steps=steps, seed=0)
+        with make_env("gpt3-175b", args.system) as env:
+            res = run_search(make_pset(args.system), env, agent, steps=steps,
+                             seed=0, batch_size=args.batch, workers=args.workers)
         print(f"{agent:4s} best={res.best_reward:.3e} steps_to_peak={res.steps_to_peak} "
-              f"invalid_rate={res.invalid_rate:.2f}")
+              f"invalid_rate={res.invalid_rate:.2f} "
+              f"points_per_s={res.points_per_s:.0f}")
 
 
 if __name__ == "__main__":

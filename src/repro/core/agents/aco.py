@@ -37,6 +37,10 @@ class AntColony(Agent):
             config = self.space.sample(self.rng)
         return config
 
+    # The inherited population API already realizes colony semantics: tau is
+    # only touched on observe, so propose_batch(n) walks n ants over the
+    # same pheromone field and observe_batch evaporates/deposits per ant.
+
     def observe(self, config: dict[str, Any], reward: float) -> None:
         super().observe(config, reward)
         vec = self.space.encode(config)

@@ -3,7 +3,7 @@ DesignSpace — agents are domain-blind by construction (the paper's
 'separation of concerns' principle)."""
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Sequence
 
 import numpy as np
 
@@ -26,6 +26,21 @@ class Agent:
         if reward > self.best_reward:
             self.best_reward = reward
             self.best_config = config
+
+    # -- population API ----------------------------------------------------
+    # The batched DSE driver asks for a whole population, evaluates it (with
+    # memoization / a process pool), then feeds back every reward at once.
+    # Defaults fall back to the scalar methods, so ``propose_batch(1)`` /
+    # ``observe_batch([c], [r])`` consume the RNG and mutate state exactly
+    # like one sequential propose/observe round.
+
+    def propose_batch(self, n: int) -> list[dict[str, Any]]:
+        return [self.propose() for _ in range(n)]
+
+    def observe_batch(self, configs: Sequence[dict[str, Any]],
+                      rewards: Sequence[float]) -> None:
+        for config, reward in zip(configs, rewards):
+            self.observe(config, reward)
 
 
 def make_agent(kind: str, space: DesignSpace, seed: int = 0, **hyper) -> Agent:

@@ -32,8 +32,17 @@ class BayesianOptimizer(Agent):
         self.y: list[float] = []
 
     def propose(self) -> dict[str, Any]:
+        return self._propose_q(1)[0]
+
+    # -- population API: q-batch expected improvement -----------------------
+    # One GP fit amortizes over the whole batch (the cubic Cholesky is BO's
+    # bottleneck); the top-q pool candidates by EI form the batch.
+    def propose_batch(self, n: int) -> list[dict[str, Any]]:
+        return self._propose_q(n)
+
+    def _propose_q(self, q: int) -> list[dict[str, Any]]:
         if len(self.X) < self.n_init:
-            return self.space.sample(self.rng)
+            return [self.space.sample(self.rng) for _ in range(q)]
         X = np.array(self.X[-self.max_fit:])
         y = np.array(self.y[-self.max_fit:])
         mu, sd = y.mean(), y.std() + 1e-9
@@ -42,11 +51,11 @@ class BayesianOptimizer(Agent):
         try:
             L = np.linalg.cholesky(K)
         except np.linalg.LinAlgError:
-            return self.space.sample(self.rng)
+            return [self.space.sample(self.rng) for _ in range(q)]
         alpha = np.linalg.solve(L.T, np.linalg.solve(L, yn))
 
-        best_ei, best_cfg = -1.0, None
-        pool = [self.space.sample(self.rng) for _ in range(self.cands)]
+        n_pool = max(self.cands, q)
+        pool = [self.space.sample(self.rng) for _ in range(n_pool)]
         Z = np.array([self.space.normalize(self.space.encode(c)) for c in pool])
         Ks = _rbf(Z, X, self.ls)
         mean = Ks @ alpha
@@ -56,8 +65,8 @@ class BayesianOptimizer(Agent):
         fbest = yn.max()
         z = (mean - fbest) / std
         ei = std * (z * _ncdf(z) + _npdf(z))
-        i = int(np.argmax(ei))
-        return pool[i]
+        order = np.argsort(-ei, kind="stable")[:q]
+        return [pool[int(i)] for i in order]
 
     def observe(self, config: dict[str, Any], reward: float) -> None:
         super().observe(config, reward)

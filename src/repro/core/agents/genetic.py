@@ -37,3 +37,8 @@ class GeneticAlgorithm(Agent):
         if len(self.pop) > self.pop_size:
             self.pop.sort(key=lambda t: t[0], reverse=True)
             self.pop = self.pop[: self.pop_size]
+
+    # The inherited population API already realizes whole-generation GA:
+    # propose only reads the current population (never mid-batch rewards),
+    # so propose_batch(n) breeds one generation, and the per-individual
+    # trims in observe_batch keep exactly the top-pop_size survivors.

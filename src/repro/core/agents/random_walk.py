@@ -16,3 +16,7 @@ class RandomWalker(Agent):
 
     def propose(self) -> dict[str, Any]:
         return self.space.sample(self.rng)
+
+    # The inherited propose_batch(n) is n independent walkers; proposals are
+    # history-free, so batched and sequential searches coincide at every
+    # step for any batch size.

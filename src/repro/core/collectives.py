@@ -14,6 +14,7 @@ import math
 from dataclasses import dataclass
 from typing import Sequence
 
+from repro.core.cache import switchable_lru_cache
 from repro.core.topology import Network, TopoDim
 
 ALGOS = ("ring", "direct", "rhd", "dbt")
@@ -101,6 +102,12 @@ def multidim_collective_time_us(kind: str, size_bytes: float, net: Network,
                                 dims: Sequence[int] | None = None) -> float:
     """A collective spanning several mesh dimensions.
 
+    Memoized on ``(kind, size, net, algos, chunks, mode, dims)`` — traces
+    repeat the same per-layer collective shapes, and searches revisit design
+    points, so the hit rate on the DSE hot path is very high.  ``Network``
+    and ``TopoDim`` are frozen dataclasses, making the whole key hashable;
+    a hit is bit-identical to the uncached computation.
+
     baseline:    hierarchical reduce-scatter up the dims then all-gather back
                  down (sizes shrink by the group size at each hop); chunks
                  pipeline across the per-dim phases.
@@ -108,6 +115,15 @@ def multidim_collective_time_us(kind: str, size_bytes: float, net: Network,
                  concurrently on disjoint chunks (Cho et al., MLSys'19) —
                  total time approaches the slowest dim instead of the sum.
     """
+    return _multidim_collective_time_cached(
+        kind, float(size_bytes), net, tuple(algos), chunks, mode,
+        None if dims is None else tuple(dims))
+
+
+def _multidim_collective_time_impl(kind: str, size_bytes: float, net: Network,
+                                   algos: Sequence[str], chunks: int,
+                                   mode: str,
+                                   dims: Sequence[int] | None) -> float:
     idx = list(range(len(net.dims))) if dims is None else list(dims)
     idx = [i for i in idx if net.dims[i].npus > 1]
     if not idx or size_bytes <= 0:
@@ -139,3 +155,7 @@ def multidim_collective_time_us(kind: str, size_bytes: float, net: Network,
         return max(phases) + (sum(phases) - max(phases)) / c
     # hierarchical with chunk pipelining between consecutive phases
     return sum(p / c for p in phases) + (c - 1) / c * max(phases)
+
+
+_multidim_collective_time_cached = \
+    switchable_lru_cache(maxsize=131072)(_multidim_collective_time_impl)

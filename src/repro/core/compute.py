@@ -4,6 +4,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+import numpy as np
+
 
 @dataclass(frozen=True)
 class Device:
@@ -17,6 +19,13 @@ class Device:
         t_c = flops / (self.peak_tflops * 1e12)
         t_m = bytes_accessed / (self.mem_bw_gbps * 1e9)
         return max(t_c, t_m) * 1e6
+
+    def op_times_us(self, flops: np.ndarray, bytes_accessed: np.ndarray) -> np.ndarray:
+        """Vectorized roofline over whole traces; float64 arithmetic matches
+        the scalar path bit for bit."""
+        t_c = np.asarray(flops, dtype=np.float64) / (self.peak_tflops * 1e12)
+        t_m = np.asarray(bytes_accessed, dtype=np.float64) / (self.mem_bw_gbps * 1e9)
+        return np.maximum(t_c, t_m) * 1e6
 
     def ridge_intensity(self) -> float:
         """FLOP/byte at which the device turns compute-bound."""

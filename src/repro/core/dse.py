@@ -1,6 +1,13 @@
 """Design-space-exploration driver: agent x environment loop with
 convergence bookkeeping (reward-vs-step curves, steps-to-peak — the data
-behind the paper's Fig. 9/10)."""
+behind the paper's Fig. 9/10).
+
+The loop is batch-driven: each round asks the agent for a population of
+``batch_size`` proposals, pushes them through ``CosmicEnv.step_batch``
+(memoized, optionally on a process pool), and feeds every reward back at
+once.  ``batch_size=1`` reproduces the sequential propose/step/observe loop
+exactly — same RNG stream, same rewards, same convergence bookkeeping.
+"""
 from __future__ import annotations
 
 import json
@@ -27,6 +34,8 @@ class SearchResult:
     reward_curve: list[float]
     invalid_rate: float
     wall_s: float
+    batch_size: int = 1
+    points_per_s: float = 0.0
 
     def summary(self) -> dict[str, Any]:
         return {
@@ -36,11 +45,19 @@ class SearchResult:
             "steps_to_peak": self.steps_to_peak,
             "invalid_rate": round(self.invalid_rate, 4),
             "wall_s": round(self.wall_s, 2),
+            "batch_size": self.batch_size,
+            "points_per_s": round(self.points_per_s, 1),
         }
 
 
 def run_search(pset: ParameterSet, env: CosmicEnv, agent_kind: str = "ga",
-               steps: int = 500, seed: int = 0, **agent_hyper) -> SearchResult:
+               steps: int = 500, seed: int = 0, batch_size: int = 1,
+               workers: int = 0, **agent_hyper) -> SearchResult:
+    """Explore ``steps`` design points.
+
+    batch_size: population evaluated per agent round (1 = sequential).
+    workers:    >1 fans distinct points of each batch out to a process pool.
+    """
     space = DesignSpace(pset)
     agent = make_agent(agent_kind, space, seed=seed, **agent_hyper)
     t0 = time.time()
@@ -48,17 +65,31 @@ def run_search(pset: ParameterSet, env: CosmicEnv, agent_kind: str = "ga",
     best, best_step, best_lat = -np.inf, 0, float("inf")
     best_cfg = None
     n_invalid = 0
-    for i in range(steps):
-        cfg = agent.propose()
-        ev = env.step(cfg)
-        agent.observe(cfg, ev.reward)
-        n_invalid += not ev.valid
-        if ev.reward > best:
-            best, best_step, best_cfg, best_lat = ev.reward, i, cfg, ev.latency_ms
-        curve.append(best)
+    i = 0
+    # reap a pool this search causes to exist, but leave one the caller set
+    # up (context-managed env) alone so it can amortize across searches
+    caller_owns_pool = env.pool_is_caller_managed()
+    try:
+        while i < steps:
+            n = min(max(batch_size, 1), steps - i)
+            cfgs = agent.propose_batch(n)
+            evs = env.step_batch(cfgs, workers=workers)
+            agent.observe_batch(cfgs, [ev.reward for ev in evs])
+            for cfg, ev in zip(cfgs, evs):
+                n_invalid += not ev.valid
+                if ev.reward > best:
+                    best, best_step, best_cfg, best_lat = ev.reward, i, cfg, ev.latency_ms
+                curve.append(best)
+                i += 1
+    finally:
+        if workers > 1 and not caller_owns_pool:
+            env.close()  # don't leak pool workers past the search
+    wall = time.time() - t0
     return SearchResult(
         agent=agent_kind, steps=steps, best_reward=float(best),
         best_config=best_cfg, best_latency_ms=float(best_lat),
         steps_to_peak=best_step, reward_curve=curve,
-        invalid_rate=n_invalid / max(steps, 1), wall_s=time.time() - t0,
+        invalid_rate=n_invalid / max(steps, 1), wall_s=wall,
+        batch_size=max(batch_size, 1),
+        points_per_s=steps / max(wall, 1e-9),
     )

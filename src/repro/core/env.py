@@ -4,14 +4,26 @@ An agent submits a PsA configuration; the environment materializes the
 (workload, collective, network, compute) stacks, runs the WTG + simulator,
 and returns the reward.  Fixed parameters (single-stack baselines) are
 handled upstream by ``ParameterSet.restrict`` — the env is stack-agnostic.
+
+Batched evaluation: ``step_batch`` evaluates a population of configurations
+at once, deduplicating repeated design points through a per-env evaluation
+memo (evaluation is a pure function of the config) and optionally fanning
+the distinct points out to a ``concurrent.futures`` process pool.  Results
+are identical to serial ``step`` calls in the same order.
 """
 from __future__ import annotations
 
+import itertools
+import multiprocessing
+import os
+import sys
 import time
-from dataclasses import dataclass, field
-from typing import Any
+from concurrent.futures import ProcessPoolExecutor
+from dataclasses import dataclass, field, replace
+from typing import Any, Sequence
 
 from repro.configs.base import ArchSpec
+from repro.core.cache import cache_epoch, caches_enabled
 from repro.core.compute import Device
 from repro.core.rewards import Evaluation, evaluate
 from repro.core.simulator import SystemConfig
@@ -28,6 +40,42 @@ class StepRecord:
     valid: bool
 
 
+def _config_key(config: dict[str, Any]) -> tuple:
+    """Canonical hashable key for one design point."""
+    return tuple(sorted((k, v) for k, v in config.items()))
+
+
+# -- process-pool plumbing ---------------------------------------------------
+# Workers hold a history-free copy of the env (installed once per worker via
+# the pool initializer) and evaluate configs against it; only (config ->
+# Evaluation) crosses the process boundary.
+_WORKER_ENV: "CosmicEnv | None" = None
+
+
+def _pool_init(env: "CosmicEnv") -> None:
+    global _WORKER_ENV
+    _WORKER_ENV = env
+
+
+_WORKER_SEEN_EPOCH: int | None = None
+
+
+def _pool_eval(config: dict[str, Any], caches_on: bool,
+               epoch: int) -> Evaluation:
+    assert _WORKER_ENV is not None, "pool worker not initialized"
+    # the parent's runtime cache toggle and clear_all_caches() epoch don't
+    # reach long-lived workers (fork freezes state at pool creation, spawn
+    # re-imports the defaults), so every task carries both
+    global _WORKER_SEEN_EPOCH
+    from repro.core import cache as _cache
+    if _WORKER_SEEN_EPOCH is not None and _WORKER_SEEN_EPOCH != epoch:
+        _cache.clear_all_caches()
+    _WORKER_SEEN_EPOCH = epoch
+    if _cache.caches_enabled() != caches_on:
+        _cache.set_caches_enabled(caches_on)
+    return _WORKER_ENV.evaluate_config(config)
+
+
 @dataclass
 class CosmicEnv:
     spec: ArchSpec
@@ -40,6 +88,11 @@ class CosmicEnv:
     capacity_gb: float = 24.0
     fixed_network: Network | None = None   # for workload/collective-only DSE
     history: list[StepRecord] = field(default_factory=list)
+    _eval_cache: dict[tuple, Evaluation] = field(default_factory=dict, repr=False)
+    _memo_epoch: int = field(default=-1, repr=False)
+    _executor: ProcessPoolExecutor | None = field(default=None, repr=False)
+    _executor_workers: int = field(default=0, repr=False)
+    _in_context: bool = field(default=False, repr=False)  # inside `with env:`
 
     def _network(self, config: dict[str, Any]) -> Network:
         if self.fixed_network is not None and "topology" not in config:
@@ -47,7 +100,8 @@ class CosmicEnv:
         return build_network(config["topology"], config["npus_per_dim"],
                              config["bw_per_dim"])
 
-    def step(self, config: dict[str, Any]) -> Evaluation:
+    def evaluate_config(self, config: dict[str, Any]) -> Evaluation:
+        """Pure evaluation of one design point (no history, no memo)."""
         par = Parallelism(self.n_npus, config["dp"], config["sp"], config["pp"],
                           bool(config["weight_sharded"]))
         net = self._network(config)
@@ -58,12 +112,118 @@ class CosmicEnv:
             sched_policy=config["sched_policy"],
             multidim_coll=config["multidim_coll"],
         )
-        ev = evaluate(self.spec, par, sys_cfg, batch=self.batch, seq=self.seq,
-                      mode=self.mode, objective=self.objective,
-                      capacity_gb=self.capacity_gb)
+        return evaluate(self.spec, par, sys_cfg, batch=self.batch, seq=self.seq,
+                        mode=self.mode, objective=self.objective,
+                        capacity_gb=self.capacity_gb)
+
+    def clear_memo(self) -> None:
+        self._eval_cache.clear()
+
+    def _memo(self) -> dict[tuple, Evaluation]:
+        """The evaluation memo, honoring cache.clear_all_caches() epochs."""
+        if self._memo_epoch != cache_epoch():
+            self._eval_cache.clear()
+            self._memo_epoch = cache_epoch()
+        return self._eval_cache
+
+    def _evaluate_memo(self, config: dict[str, Any]) -> Evaluation:
+        if not caches_enabled():
+            return self.evaluate_config(config)
+        self._memo()
+        key = _config_key(config)
+        ev = self._eval_cache.get(key)
+        if ev is None:
+            ev = self.evaluate_config(config)
+            self._eval_cache[key] = ev
+        return ev
+
+    def step(self, config: dict[str, Any]) -> Evaluation:
+        ev = self._evaluate_memo(config)
         self.history.append(StepRecord(len(self.history), config, ev.reward,
                                        ev.latency_ms, ev.valid))
         return ev
+
+    def step_batch(self, configs: Sequence[dict[str, Any]],
+                   workers: int = 0) -> list[Evaluation]:
+        """Evaluate a population of design points.
+
+        Distinct uncached points are computed once each — serially, or on a
+        process pool when ``workers > 1`` — then results are recorded in
+        input order, so history and returned evaluations match what serial
+        ``step`` calls would have produced.
+        """
+        memo_on = caches_enabled()
+        if memo_on:
+            # evaluate each distinct uncached point once
+            self._memo()
+            keys = [_config_key(c) for c in configs]
+            todo: dict[tuple, dict[str, Any]] = {}
+            for key, cfg in zip(keys, configs):
+                if key not in self._eval_cache:
+                    todo.setdefault(key, cfg)
+            if todo:
+                evs = self._eval_many(list(todo.values()), workers)
+                self._eval_cache.update(zip(todo.keys(), evs))
+            out = [self._eval_cache[key] for key in keys]
+        else:
+            # caches off = the honest uncached baseline: every occurrence
+            # is evaluated, including within-batch duplicates
+            out = self._eval_many(list(configs), workers)
+        for cfg, ev in zip(configs, out):
+            self.history.append(StepRecord(len(self.history), cfg, ev.reward,
+                                           ev.latency_ms, ev.valid))
+        return out
+
+    def _eval_many(self, cfgs: list[dict[str, Any]],
+                   workers: int) -> list[Evaluation]:
+        if workers > 1 and len(cfgs) > 1:
+            pool = self._get_executor(workers)
+            chunk = max(1, len(cfgs) // (self._executor_workers * 2))
+            flags = itertools.repeat(caches_enabled())
+            epochs = itertools.repeat(cache_epoch())
+            return list(pool.map(_pool_eval, cfgs, flags, epochs,
+                                 chunksize=chunk))
+        return [self.evaluate_config(c) for c in cfgs]
+
+    # -- pool lifecycle ---------------------------------------------------
+    def pool_is_caller_managed(self) -> bool:
+        """True when the caller controls pool lifetime — the env is inside a
+        ``with`` block, or a pool already exists from earlier use.  Search
+        drivers use this to decide whether to reap the pool they caused."""
+        return self._executor is not None or self._in_context
+
+    def _get_executor(self, workers: int) -> ProcessPoolExecutor:
+        workers = min(workers, os.cpu_count() or 1)
+        if self._executor is not None and self._executor_workers != workers:
+            self.close()
+        if self._executor is None:
+            bare = replace(self, history=[], _eval_cache={}, _executor=None,
+                           _executor_workers=0)
+            # fork gives near-free workers, but inherits other threads' locks
+            # mid-held — unsafe once a threaded runtime (jax) is loaded, so
+            # fall back to spawn there (slower startup, re-imports per worker)
+            method = "spawn" if ("jax" in sys.modules
+                                 or "fork" not in multiprocessing.get_all_start_methods()) \
+                else "fork"
+            self._executor = ProcessPoolExecutor(
+                max_workers=workers, initializer=_pool_init, initargs=(bare,),
+                mp_context=multiprocessing.get_context(method))
+            self._executor_workers = workers
+        return self._executor
+
+    def close(self) -> None:
+        if self._executor is not None:
+            self._executor.shutdown()
+            self._executor = None
+            self._executor_workers = 0
+
+    def __enter__(self) -> "CosmicEnv":
+        self._in_context = True
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._in_context = False
+        self.close()
 
     def best(self) -> StepRecord | None:
         valid = [r for r in self.history if r.valid]

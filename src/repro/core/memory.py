@@ -6,6 +6,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.configs.base import ArchSpec
+from repro.core.cache import switchable_lru_cache
 from repro.core.workload import Parallelism
 
 BYTES_PARAM = 2            # bf16 weights
@@ -28,6 +29,15 @@ class Footprint:
 def footprint(spec: ArchSpec, par: Parallelism, *, batch: int, seq: int,
               mode: str = "train", act_factor: float = 4.0,
               remat: bool = True, microbatches: int = 8) -> Footprint:
+    """Memoized on its (hashable) value-object arguments — the DSE loop
+    re-gates the same (spec, parallelization) points constantly."""
+    return _footprint_cached(spec, par, batch, seq, mode, act_factor,
+                             remat, microbatches)
+
+
+def _footprint_impl(spec: ArchSpec, par: Parallelism, batch: int, seq: int,
+                    mode: str, act_factor: float, remat: bool,
+                    microbatches: int) -> Footprint:
     p_total = spec.param_count()
     tp = par.tp
     shard = tp * par.pp * (par.dp if par.weight_sharded else 1)
@@ -54,6 +64,9 @@ def footprint(spec: ArchSpec, par: Parallelism, *, batch: int, seq: int,
         kv = n_attn * b * seq * spec.n_kv_heads * hd * 2 * BYTES_ACT / tp
 
     return Footprint(params / 1e9, optimizer / 1e9, acts / 1e9, kv / 1e9)
+
+
+_footprint_cached = switchable_lru_cache(maxsize=16384)(_footprint_impl)
 
 
 def fits(spec: ArchSpec, par: Parallelism, *, batch: int, seq: int,

@@ -23,8 +23,11 @@ from repro.core.topology import Network
 from repro.core.workload import Parallelism, Trace, generate_trace
 
 
-@dataclass
+@dataclass(frozen=True)
 class Evaluation:
+    """One design point's outcome.  Frozen because the env's evaluation memo
+    hands the same instance to every duplicate design point; treat `detail`
+    as read-only too."""
     reward: float
     latency_ms: float
     valid: bool

@@ -39,6 +39,12 @@ class DesignSpace:
             for d in range(p.ndim):
                 self.genes.append(Gene(p.slots[d], p.name, d, p.choices))
         self._index = {g.slot: i for i, g in enumerate(self.genes)}
+        # per-gene metadata resolved once (encode/decode sit on the agents'
+        # batched hot path): owning Parameter, scalar-slot flag, choice index
+        self._gene_param = [pset.by_name(g.param) for g in self.genes]
+        self._gene_scalar = [p.ndim == 1 for p in self._gene_param]
+        self._gene_choice_idx = [{v: i for i, v in enumerate(g.choices)}
+                                 for g in self.genes]
 
     # -- config <-> vector ----------------------------------------------
     def n_genes(self) -> int:
@@ -48,9 +54,9 @@ class DesignSpace:
         """config -> integer index vector (one index per gene)."""
         vec = np.zeros(len(self.genes), dtype=np.int64)
         for i, g in enumerate(self.genes):
-            val = config[g.param] if g.dim == 0 and self.pset.by_name(g.param).ndim == 1 \
+            val = config[g.param] if g.dim == 0 and self._gene_scalar[i] \
                 else config[g.param][g.dim]
-            vec[i] = g.choices.index(val)
+            vec[i] = self._gene_choice_idx[i][val]
         return vec
 
     def decode(self, vec: Sequence[int]) -> dict[str, Any]:
@@ -58,11 +64,10 @@ class DesignSpace:
         tmp: dict[str, list] = {}
         for i, g in enumerate(self.genes):
             val = g.choices[int(vec[i]) % len(g.choices)]
-            p = self.pset.by_name(g.param)
-            if p.ndim == 1:
+            if self._gene_scalar[i]:
                 config[g.param] = val
             else:
-                tmp.setdefault(g.param, [None] * p.ndim)[g.dim] = val
+                tmp.setdefault(g.param, [None] * self._gene_param[i].ndim)[g.dim] = val
         for k, v in tmp.items():
             config[k] = tuple(v)
         return config

@@ -17,6 +17,7 @@ from dataclasses import dataclass, field
 from typing import Any, Literal
 
 from repro.configs.base import ArchSpec, LayerDef
+from repro.core.cache import switchable_lru_cache
 
 
 @dataclass
@@ -55,6 +56,8 @@ class Parallelism:
 
 @dataclass
 class Trace:
+    """Op list with dense uids (ops[i].uid == i, as TraceBuilder assigns) —
+    the simulator's flat-array scheduling plan relies on it and validates."""
     ops: list[Op]
     meta: dict[str, Any] = field(default_factory=dict)
 
@@ -136,15 +139,44 @@ def generate_trace(spec: ArchSpec, par: Parallelism, *, batch: int, seq: int,
                    mode: str = "train", microbatches: int | None = None) -> Trace:
     """Expand the symbolic template into one NPU's op trace.
 
+    Memoized on ``(spec, par, batch, seq, mode, microbatches)`` — every
+    argument is a hashable value object, so a cache hit returns the SAME
+    ``Trace`` built by the uncached expansion.  Callers must treat the
+    returned trace as immutable (the simulator only reads it).
+
     train:     fwd + bwd per layer, TP collectives on activation boundaries,
                per-layer DP gradient reduction overlapping the backward pass,
                PP pipeline-bubble factor on compute.
     inference: fwd only (prefill); decode handled by per-token message sizes.
     """
+    return _generate_trace_cached(spec, par, batch, seq, mode, microbatches)
+
+
+def _generate_trace_impl(spec: ArchSpec, par: Parallelism, batch: int,
+                         seq: int, mode: str,
+                         microbatches: int | None) -> Trace:
     tb = TraceBuilder()
     b = batch / par.dp
     s = seq / par.sp
     tp = par.tp
+
+    # most specs repeat one or two LayerDefs; compute per-layer costs once
+    _flops_memo: dict[LayerDef, tuple[float, float]] = {}
+    _pbytes_memo: dict[tuple[LayerDef, float], float] = {}
+
+    def layer_flops(ld: LayerDef) -> tuple[float, float]:
+        v = _flops_memo.get(ld)
+        if v is None:
+            v = _layer_flops_fwd(spec, ld, b, s, seq)
+            _flops_memo[ld] = v
+        return v
+
+    def layer_pbytes(ld: LayerDef, bytes_per: float) -> float:
+        v = _pbytes_memo.get((ld, bytes_per))
+        if v is None:
+            v = _layer_param_bytes(spec, ld, tp, bytes_per)
+            _pbytes_memo[(ld, bytes_per)] = v
+        return v
 
     if mode == "decode":
         # one token with a KV cache of `seq`: per layer a GEMV over the
@@ -154,7 +186,7 @@ def generate_trace(spec: ArchSpec, par: Parallelism, *, batch: int, seq: int,
         layers_d = spec.layer_defs()[: max(1, spec.n_layers // par.pp)]
         prev = []
         for i, ld in enumerate(layers_d):
-            w_bytes = _layer_param_bytes(spec, ld, tp, BYTES_ACT)
+            w_bytes = layer_pbytes(ld, BYTES_ACT)
             flops = w_bytes * b  # 2 flops per bf16 weight x b tokens
             kv_read = b * seq * spec.n_kv_heads * spec.resolved_head_dim * 2 * BYTES_ACT / tp                 if ld.mixer.startswith("attn") else 0.0
             u = tb.comp(f"L{i}.decode", flops, w_bytes + kv_read, prev)
@@ -196,7 +228,7 @@ def generate_trace(spec: ArchSpec, par: Parallelism, *, batch: int, seq: int,
 
     fwd_tail: dict[int, int] = {}
     for i, ld in enumerate(stage_layers):
-        mixer_f, ffn_f = _layer_flops_fwd(spec, ld, b, s, seq)
+        mixer_f, ffn_f = layer_flops(ld)
         u = tb.comp(f"L{i}.mixer.fwd", bubble * mixer_f / tp / eff_mixer,
                     3 * act_bytes / max(tp, 1), prev)
         if tp > 1:
@@ -225,7 +257,7 @@ def generate_trace(spec: ArchSpec, par: Parallelism, *, batch: int, seq: int,
         dp_group_sz = par.dp
         for i in reversed(range(len(stage_layers))):
             ld = stage_layers[i]
-            mixer_f, ffn_f = _layer_flops_fwd(spec, ld, b, s, seq)
+            mixer_f, ffn_f = layer_flops(ld)
             u = tb.comp(f"L{i}.bwd",
                         bubble * 2.0 * (mixer_f / eff_mixer + ffn_f / eff_ffn) / tp,
                         6 * act_bytes / max(tp, 1), prev)
@@ -233,7 +265,7 @@ def generate_trace(spec: ArchSpec, par: Parallelism, *, batch: int, seq: int,
                 u = tb.coll(f"L{i}.bwd.ar", "all_reduce", 2 * act_bytes, "tp", [u])
             prev = [u]
             if dp_group_sz > 1:
-                pb = _layer_param_bytes(spec, ld, tp, grad_bytes_per)
+                pb = layer_pbytes(ld, grad_bytes_per)
                 kind = "reduce_scatter" if par.weight_sharded else "all_reduce"
                 tb.coll(f"L{i}.grad.{kind}", kind, pb, "dp", [u])
         # embedding/head grads
@@ -243,7 +275,7 @@ def generate_trace(spec: ArchSpec, par: Parallelism, *, batch: int, seq: int,
                     emb_b, "dp", prev)
         if par.weight_sharded and dp_group_sz > 1:
             # optimizer re-gathers sharded params for the next step
-            tot = sum(_layer_param_bytes(spec, ld, tp, BYTES_ACT) for ld in stage_layers)
+            tot = sum(layer_pbytes(ld, BYTES_ACT) for ld in stage_layers)
             tb.coll("params.allgather", "all_gather", tot, "dp", prev)
 
     if par.pp > 1:
@@ -255,3 +287,6 @@ def generate_trace(spec: ArchSpec, par: Parallelism, *, batch: int, seq: int,
                                  weight_sharded=par.weight_sharded, bubble=bubble,
                                  microbatches=mb))
     return tr
+
+
+_generate_trace_cached = switchable_lru_cache(maxsize=4096)(_generate_trace_impl)

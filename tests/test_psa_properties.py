@@ -1,0 +1,43 @@
+"""Property-based PSS tests (hypothesis-only; the deterministic PsA/PSS
+cases live in test_psa.py and always run)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property-based PSS tests need the `test` extra")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.psa import paper_psa
+from repro.core.space import DesignSpace
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_sample_always_valid(seed):
+    ds = DesignSpace(paper_psa(1024))
+    cfg = ds.sample(np.random.default_rng(seed))
+    assert ds.is_valid(cfg)
+    assert cfg["dp"] * cfg["sp"] * cfg["pp"] <= 1024
+    assert np.prod(cfg["npus_per_dim"]) == 1024
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_encode_decode_roundtrip(seed):
+    ds = DesignSpace(paper_psa(1024))
+    cfg = ds.sample(np.random.default_rng(seed))
+    assert ds.decode(ds.encode(cfg)) == cfg
+    norm = ds.normalize(ds.encode(cfg))
+    assert ((0.0 <= norm) & (norm <= 1.0)).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_mutate_crossover_stay_valid(seed):
+    rng = np.random.default_rng(seed)
+    ds = DesignSpace(paper_psa(1024))
+    a, b = ds.sample(rng), ds.sample(rng)
+    assert ds.is_valid(ds.mutate(a, rng))
+    assert ds.is_valid(ds.crossover(a, b, rng))

@@ -1,0 +1,26 @@
+"""Property-based collective cost-model tests (hypothesis-only; the
+deterministic simulator cases live in test_simulator.py and
+test_sim_invariants.py and always run)."""
+from __future__ import annotations
+
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property-based simulator tests need the `test` extra")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.collectives import collective_time_us
+from repro.core.topology import TopoDim
+
+
+@settings(max_examples=40, deadline=None)
+@given(size=st.floats(1e3, 1e12), algo=st.sampled_from(["ring", "direct", "rhd", "dbt"]),
+       kind=st.sampled_from(["all_reduce", "all_gather", "reduce_scatter", "all_to_all"]),
+       topo=st.sampled_from(["ring", "switch", "fc"]),
+       n=st.sampled_from([2, 4, 8, 16]))
+def test_collective_time_positive_and_monotone(size, algo, kind, topo, n):
+    d = TopoDim(topo, n, 200.0)
+    t1 = collective_time_us(kind, size, d, algo)
+    t2 = collective_time_us(kind, size * 2, d, algo)
+    assert t1 > 0
+    assert t2 >= t1  # monotone in message size
