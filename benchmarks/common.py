@@ -43,11 +43,15 @@ WORKLOAD_DEFAULTS = dict(dp=64, pp=1, sp=4, weight_sharded=1)
 
 
 def make_env(arch: str, system: str, *, batch: int = 1024, seq: int | None = None,
-             objective: str = "perf_per_bw", mode: str = "train") -> CosmicEnv:
+             objective: str = "perf_per_bw", mode: str = "train",
+             scenario=None, eval_store: dict | None = None,
+             decode_tokens: int = 64) -> CosmicEnv:
     n, dev = SYSTEMS[system]
     spec = ARCHS[arch]
-    return CosmicEnv(spec=spec, n_npus=n, device=dev, batch=batch,
-                     seq=seq or spec.max_seq, mode=mode, objective=objective)
+    return CosmicEnv(spec=spec, n_npus=n, device=dev, scenario=scenario,
+                     batch=batch, seq=seq or spec.max_seq, mode=mode,
+                     decode_tokens=decode_tokens, objective=objective,
+                     eval_store=eval_store)
 
 
 def make_pset(system: str, *, stacks: set[str] | None = None, max_pp: int = 4) -> ParameterSet:

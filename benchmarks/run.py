@@ -20,7 +20,7 @@ def main() -> None:
 
     from benchmarks import (calibration, fig4_spread, fig6_fullstack,
                             fig8_scalability, fig10_agents, roofline,
-                            table6_codesign)
+                            serve_scenarios, table6_codesign)
     from benchmarks.common import emit
 
     modules = {
@@ -29,6 +29,7 @@ def main() -> None:
         "fig8": lambda: fig8_scalability.run(args.steps),
         "fig10": lambda: fig10_agents.run(args.steps),
         "table6": lambda: table6_codesign.run(args.steps),
+        "serve": lambda: serve_scenarios.run(args.steps),
         "roofline": lambda: roofline.run(),
         "calibration": lambda: calibration.run(),
     }

@@ -1,0 +1,62 @@
+"""Scenario sweep: monolithic serving vs disaggregated prefill/decode vs
+multi-tenant partitioning, each a full-stack GA search on gpt3-13b/system2.
+
+Rows report best end-to-end latency (serving), the disagg-vs-monolithic
+latency ratio (the disaggregation win), and weighted SLO attainment for the
+multi-tenant cluster.
+"""
+from __future__ import annotations
+
+from benchmarks.common import STEPS, SYSTEMS, emit, make_env, make_pset
+from repro.configs import ARCHS
+from repro.core.dse import run_search
+from repro.core.scenario import (DisaggServeScenario, MultiTenantScenario,
+                                 Tenant, TrainScenario, scenario_psa)
+
+N_NPUS = SYSTEMS["system2"][0]
+
+
+def _search(scenario, objective: str, steps: int, arch: str = "gpt3-13b"):
+    pset = scenario_psa(make_pset("system2"), scenario, N_NPUS)
+    with make_env(arch, "system2", scenario=scenario,
+                  objective=objective) as env:
+        return run_search(pset, env, "ga", steps=steps, seed=0,
+                          batch_size=32)
+
+
+def run(steps: int | None = None) -> list[tuple]:
+    steps = steps or STEPS
+    rows = []
+
+    mono = _search(TrainScenario(64, 2048, "serve"), "latency", steps)
+    rows.append(("serve_monolithic", 0.0,
+                 f"best_latency_ms={mono.best_latency_ms:.1f} "
+                 f"points_per_s={mono.points_per_s:.0f}"))
+
+    dis = _search(DisaggServeScenario(64, 2048), "latency", steps)
+    cfg = dis.best_config or {}
+    rows.append(("serve_disagg", 0.0,
+                 f"best_latency_ms={dis.best_latency_ms:.1f} "
+                 f"prefill_frac={cfg.get('prefill_frac')} "
+                 f"decode_batch={cfg.get('decode_batch')} "
+                 f"points_per_s={dis.points_per_s:.0f}"))
+    rows.append(("serve_disagg_vs_monolithic", 0.0,
+                 f"speedup=x{mono.best_latency_ms / max(dis.best_latency_ms, 1e-9):.2f}"))
+
+    tenants = (
+        Tenant("train-13b", ARCHS["gpt3-13b"], 512, 2048, "train",
+               slo_ms=4e5, weight=2.0),
+        Tenant("serve-13b", ARCHS["gpt3-13b"], 64, 2048, "serve", slo_ms=3e3),
+        Tenant("serve-1.5b", ARCHS["qwen2-1.5b"], 64, 2048, "serve",
+               slo_ms=3e2, device_name="system3-h100"),
+    )
+    mt = _search(MultiTenantScenario(tenants=tenants), "perf_per_bw", steps)
+    sizes = (mt.best_config or {}).get("tenant_npus")
+    rows.append(("multi_tenant", 0.0,
+                 f"weighted_slo_attainment={mt.best_reward:.3f} "
+                 f"tenant_npus={sizes} points_per_s={mt.points_per_s:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,80 @@
+"""Disaggregated-serving DSE: does splitting the cluster into prefill and
+decode pools beat the best monolithic serving config the same search budget
+can find?
+
+Two full-stack GA searches over the same system and budget:
+
+  monolithic  TrainScenario(mode="serve") — one pool, one parallelization
+              for both phases (the engine's original serving model);
+  disagg      DisaggServeScenario — the agent additionally searches the
+              scenario stack (prefill_frac, decode_batch), so prefill can
+              keep MXU-efficient moderate TP while decode shards weight/KV
+              reads across its own pool.
+
+    PYTHONPATH=src python examples/dse_disagg_serve.py [--steps 500]
+                                [--arch gpt3-13b] [--batch-size 32]
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))  # for benchmarks/
+
+from benchmarks.common import SYSTEMS, make_env, make_pset
+from repro.core.dse import run_search
+from repro.core.scenario import DisaggServeScenario, TrainScenario, scenario_psa
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=500)
+    ap.add_argument("--arch", default="gpt3-13b")
+    ap.add_argument("--system", default="system2",
+                    choices=["system1", "system2", "system3"])
+    ap.add_argument("--requests", type=int, default=64,
+                    help="requests per serving round")
+    ap.add_argument("--seq", type=int, default=2048, help="prompt length")
+    ap.add_argument("--decode-tokens", type=int, default=64)
+    ap.add_argument("--batch-size", type=int, default=32,
+                    help="population evaluated per agent round")
+    ap.add_argument("--workers", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    n_npus = SYSTEMS[args.system][0]
+    mono_sc = TrainScenario(args.requests, args.seq, "serve",
+                            args.decode_tokens)
+    disagg_sc = DisaggServeScenario(args.requests, args.seq,
+                                    args.decode_tokens)
+
+    results = {}
+    for name, sc in (("monolithic", mono_sc), ("disagg", disagg_sc)):
+        pset = scenario_psa(make_pset(args.system), sc, n_npus)
+        with make_env(args.arch, args.system, scenario=sc,
+                      objective="latency") as env:
+            res = run_search(pset, env, "ga", steps=args.steps,
+                             seed=args.seed, batch_size=args.batch_size,
+                             workers=args.workers)
+        results[name] = res
+        print(f"{name:10s} best e2e latency {res.best_latency_ms:9.1f} ms "
+              f"(reward {res.best_reward:.3e}, steps_to_peak "
+              f"{res.steps_to_peak}, points_per_s {res.points_per_s:.0f})")
+        if res.best_config:
+            cfg = res.best_config
+            knobs = f"DP={cfg['dp']} SP={cfg['sp']} PP={cfg['pp']}"
+            if "prefill_frac" in cfg:
+                knobs += (f" prefill_frac={cfg['prefill_frac']} "
+                          f"decode_batch={cfg['decode_batch']}")
+            print(f"{'':10s} {knobs}")
+
+    mono, disagg = results["monolithic"], results["disagg"]
+    speedup = mono.best_latency_ms / max(disagg.best_latency_ms, 1e-9)
+    verdict = "beats" if disagg.best_latency_ms < mono.best_latency_ms \
+        else "does NOT beat"
+    print(f"\ndisaggregation {verdict} the best monolithic config: "
+          f"{disagg.best_latency_ms:.1f} ms vs {mono.best_latency_ms:.1f} ms "
+          f"(x{speedup:.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,15 +1,21 @@
 """CosmicEnv: the ArchGym-style environment wrapping the simulator.
 
 An agent submits a PsA configuration; the environment materializes the
-(workload, collective, network, compute) stacks, runs the WTG + simulator,
-and returns the reward.  Fixed parameters (single-stack baselines) are
-handled upstream by ``ParameterSet.restrict`` — the env is stack-agnostic.
+(workload, collective, network, compute) stacks and hands the resolved
+``EnvContext`` to its ``Scenario``, which runs the WTG + simulator and
+returns the reward.  Fixed parameters (single-stack baselines) are handled
+upstream by ``ParameterSet.restrict`` — the env is stack-agnostic.
 
 Batched evaluation: ``step_batch`` evaluates a population of configurations
 at once, deduplicating repeated design points through a per-env evaluation
 memo (evaluation is a pure function of the config) and optionally fanning
 the distinct points out to a ``concurrent.futures`` process pool.  Results
 are identical to serial ``step`` calls in the same order.
+
+Cross-search sharing: pass the same ``eval_store`` dict to several envs
+over the same (spec, scenario, system) and they share one evaluation memo —
+benchmark sweeps running four agents over one space stop re-evaluating
+identical design points per agent.  Hit/miss counters live on each env.
 """
 from __future__ import annotations
 
@@ -25,10 +31,10 @@ from typing import Any, Sequence
 from repro.configs.base import ArchSpec
 from repro.core.cache import cache_epoch, caches_enabled
 from repro.core.compute import Device
-from repro.core.rewards import Evaluation, evaluate
+from repro.core.rewards import Evaluation
+from repro.core.scenario import EnvContext, Scenario, TrainScenario
 from repro.core.simulator import SystemConfig
 from repro.core.topology import Network, build_network
-from repro.core.workload import Parallelism
 
 
 @dataclass
@@ -81,18 +87,40 @@ class CosmicEnv:
     spec: ArchSpec
     n_npus: int
     device: Device
-    batch: int
-    seq: int
-    mode: str = "train"
+    # the workload shape under design.  Either pass a Scenario, or use the
+    # legacy (batch, seq, mode, decode_tokens) fields and get a TrainScenario
+    # built for you — PR-1 call sites keep working unchanged.
+    scenario: Scenario | None = None
+    batch: int | None = None
+    seq: int | None = None
+    mode: str | None = "train"
+    decode_tokens: int | None = 64
     objective: str = "perf_per_bw"
     capacity_gb: float = 24.0
     fixed_network: Network | None = None   # for workload/collective-only DSE
+    # optional cross-search shared memo (see module docstring)
+    eval_store: dict[tuple, Evaluation] | None = None
+    store_hits: int = 0
+    store_misses: int = 0
     history: list[StepRecord] = field(default_factory=list)
     _eval_cache: dict[tuple, Evaluation] = field(default_factory=dict, repr=False)
+    _sig_cache: tuple | None = field(default=None, repr=False)
     _memo_epoch: int = field(default=-1, repr=False)
     _executor: ProcessPoolExecutor | None = field(default=None, repr=False)
     _executor_workers: int = field(default=0, repr=False)
     _in_context: bool = field(default=False, repr=False)  # inside `with env:`
+
+    def __post_init__(self) -> None:
+        if self.scenario is None:
+            if self.batch is None or self.seq is None:
+                raise TypeError("CosmicEnv needs either a scenario or "
+                                "legacy batch/seq fields")
+            self.scenario = TrainScenario(self.batch, self.seq, self.mode,
+                                          self.decode_tokens)
+        else:
+            # the scenario owns the workload shape — drop legacy fields so
+            # nothing reads stale workload metadata off the env
+            self.batch = self.seq = self.mode = self.decode_tokens = None
 
     def _network(self, config: dict[str, Any]) -> Network:
         if self.fixed_network is not None and "topology" not in config:
@@ -100,10 +128,8 @@ class CosmicEnv:
         return build_network(config["topology"], config["npus_per_dim"],
                              config["bw_per_dim"])
 
-    def evaluate_config(self, config: dict[str, Any]) -> Evaluation:
-        """Pure evaluation of one design point (no history, no memo)."""
-        par = Parallelism(self.n_npus, config["dp"], config["sp"], config["pp"],
-                          bool(config["weight_sharded"]))
+    def context(self, config: dict[str, Any]) -> EnvContext:
+        """Resolve one design point's network/system stacks for the scenario."""
         net = self._network(config)
         sys_cfg = SystemConfig(
             network=net, device=self.device,
@@ -112,15 +138,48 @@ class CosmicEnv:
             sched_policy=config["sched_policy"],
             multidim_coll=config["multidim_coll"],
         )
-        return evaluate(self.spec, par, sys_cfg, batch=self.batch, seq=self.seq,
-                        mode=self.mode, objective=self.objective,
-                        capacity_gb=self.capacity_gb)
+        return EnvContext(spec=self.spec, n_npus=self.n_npus,
+                          device=self.device, objective=self.objective,
+                          capacity_gb=self.capacity_gb, config=config,
+                          network=net, sys_cfg=sys_cfg)
+
+    def evaluate_config(self, config: dict[str, Any]) -> Evaluation:
+        """Pure evaluation of one design point (no history, no memo)."""
+        return self.scenario.evaluate(self.context(config))
 
     def clear_memo(self) -> None:
         self._eval_cache.clear()
+        if self.eval_store is not None:
+            # evict only this env's signature from the shared store —
+            # other envs' entries are theirs to manage
+            sig = self._store_sig()
+            for k in [k for k in self.eval_store if k[0] == sig]:
+                del self.eval_store[k]
+
+    # -- memoization -------------------------------------------------------
+    # Private memo keys are the bare config; the shared store prefixes the
+    # env signature so envs over different (spec, scenario, system) can
+    # safely share one dict.
+    def _store_sig(self) -> tuple:
+        if self._sig_cache is None:  # all inputs are frozen value objects
+            # hash the full spec/device (not just names): same-named but
+            # differing objects must not share store entries
+            self._sig_cache = (self.spec, self.n_npus, self.device,
+                               self.objective, self.capacity_gb,
+                               self.scenario, self.fixed_network)
+        return self._sig_cache
+
+    def _point_key(self, config: dict[str, Any]) -> tuple:
+        canon = getattr(self.scenario, "canonical", None)
+        if canon is not None:
+            config = canon(config)
+        key = _config_key(config)
+        return (self._store_sig(), key) if self.eval_store is not None else key
 
     def _memo(self) -> dict[tuple, Evaluation]:
         """The evaluation memo, honoring cache.clear_all_caches() epochs."""
+        if self.eval_store is not None:
+            return self.eval_store  # lifetime is the caller's to manage
         if self._memo_epoch != cache_epoch():
             self._eval_cache.clear()
             self._memo_epoch = cache_epoch()
@@ -129,12 +188,15 @@ class CosmicEnv:
     def _evaluate_memo(self, config: dict[str, Any]) -> Evaluation:
         if not caches_enabled():
             return self.evaluate_config(config)
-        self._memo()
-        key = _config_key(config)
-        ev = self._eval_cache.get(key)
+        memo = self._memo()
+        key = self._point_key(config)
+        ev = memo.get(key)
         if ev is None:
+            self.store_misses += self.eval_store is not None
             ev = self.evaluate_config(config)
-            self._eval_cache[key] = ev
+            memo[key] = ev
+        else:
+            self.store_hits += self.eval_store is not None
         return ev
 
     def step(self, config: dict[str, Any]) -> Evaluation:
@@ -155,16 +217,28 @@ class CosmicEnv:
         memo_on = caches_enabled()
         if memo_on:
             # evaluate each distinct uncached point once
-            self._memo()
-            keys = [_config_key(c) for c in configs]
+            memo = self._memo()
+            shared = self.eval_store is not None
+            keys = [self._point_key(c) for c in configs]
             todo: dict[tuple, dict[str, Any]] = {}
             for key, cfg in zip(keys, configs):
-                if key not in self._eval_cache:
+                if key not in memo:
                     todo.setdefault(key, cfg)
+            if shared:
+                # per-occurrence accounting matching serial step() calls:
+                # the first sighting of a new key is the miss, duplicates
+                # (within the batch or not) are hits
+                counted_new: set = set()
+                for key in keys:
+                    if key not in todo or key in counted_new:
+                        self.store_hits += 1
+                    else:
+                        self.store_misses += 1
+                        counted_new.add(key)
             if todo:
                 evs = self._eval_many(list(todo.values()), workers)
-                self._eval_cache.update(zip(todo.keys(), evs))
-            out = [self._eval_cache[key] for key in keys]
+                memo.update(zip(todo.keys(), evs))
+            out = [memo[key] for key in keys]
         else:
             # caches off = the honest uncached baseline: every occurrence
             # is evaluated, including within-batch duplicates
@@ -198,7 +272,8 @@ class CosmicEnv:
             self.close()
         if self._executor is None:
             bare = replace(self, history=[], _eval_cache={}, _executor=None,
-                           _executor_workers=0)
+                           _executor_workers=0, eval_store=None,
+                           store_hits=0, store_misses=0)
             # fork gives near-free workers, but inherits other threads' locks
             # mid-held — unsafe once a threaded runtime (jax) is loaded, so
             # fall back to spawn there (slower startup, re-imports per worker)

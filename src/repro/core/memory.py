@@ -59,11 +59,19 @@ def _footprint_impl(spec: ArchSpec, par: Parallelism, batch: int, seq: int,
 
     kv = 0.0
     if mode != "train":
-        hd = spec.resolved_head_dim
-        n_attn = sum(1 for ld in spec.layer_defs() if ld.mixer.startswith("attn"))
-        kv = n_attn * b * seq * spec.n_kv_heads * hd * 2 * BYTES_ACT / tp
+        kv = kv_cache_bytes(spec, batch=b, seq=seq, tp=tp)
 
     return Footprint(params / 1e9, optimizer / 1e9, acts / 1e9, kv / 1e9)
+
+
+def kv_cache_bytes(spec: ArchSpec, *, batch: float, seq: int,
+                   tp: int = 1) -> float:
+    """K+V cache bytes for ``batch`` requests at ``seq`` tokens, per TP
+    shard — the single source of truth for both the footprint gate and the
+    disaggregated-serving KV transfer size."""
+    hd = spec.resolved_head_dim
+    n_attn = sum(1 for ld in spec.layer_defs() if ld.mixer.startswith("attn"))
+    return n_attn * batch * seq * spec.n_kv_heads * hd * 2 * BYTES_ACT / tp
 
 
 _footprint_cached = switchable_lru_cache(maxsize=16384)(_footprint_impl)

@@ -14,7 +14,10 @@ import math
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterable, Sequence
 
-Stack = str  # 'workload' | 'collective' | 'network' | 'compute'
+# 'scenario' parameters are contributed by the active Scenario (e.g. the
+# disaggregated-serving prefill/decode split) via ``Scenario.psa_params()``
+# and searched alongside the paper's four stacks.
+Stack = str  # 'workload' | 'collective' | 'network' | 'compute' | 'scenario'
 
 
 @dataclass(frozen=True)
@@ -55,6 +58,7 @@ class Constraint:
     kinds:
       product_eq : prod(values of `params`) == target
       product_le : prod(values of `params`) <= target
+      sum_le     : sum(values of `params`) <= target   (partition budgets)
       predicate  : fn(config) -> bool  (escape hatch)
     `params` may name scalar parameters or a multidim parameter (expands to
     all of its slots).
@@ -71,6 +75,8 @@ class Constraint:
             return self.name
         if self.kind == "predicate":
             return "predicate"
+        if self.kind == "sum_le":
+            return f"sum({', '.join(self.params)}) <= {self.target}"
         op = {"product_eq": "==", "product_le": "<="}[self.kind]
         return f"product({', '.join(self.params)}) {op} {self.target}"
 
@@ -117,6 +123,15 @@ class ParameterSet:
                 fixed[p.name] = defaults[p.name]
         return ParameterSet(self.params, self.constraints, fixed,
                             name=f"{self.name}:{'+'.join(sorted(stacks))}")
+
+    def extend(self, params: Iterable[Parameter],
+               constraints: Iterable[Constraint] = (),
+               name: str | None = None) -> "ParameterSet":
+        """A new ParameterSet with extra parameters/constraints appended —
+        how a Scenario contributes its searchable knobs to a base PsA."""
+        return ParameterSet(self.params + list(params),
+                            self.constraints + list(constraints),
+                            dict(self.fixed), name=name or self.name)
 
     def cardinality(self) -> float:
         """Raw design-space size (unconstrained product — Table 1's count)."""

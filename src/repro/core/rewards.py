@@ -55,6 +55,14 @@ REWARDS: dict[str, Callable[[float, Network], float]] = {
 }
 
 
+def slo_attainment(latency_ms: float, slo_ms: float) -> float:
+    """Soft SLO attainment in [0, 1]: 1 when the latency meets the SLO,
+    degrading proportionally when it misses (multi-tenant objective)."""
+    if latency_ms <= 0 or math.isinf(latency_ms):
+        return 0.0
+    return min(1.0, slo_ms / latency_ms)
+
+
 def evaluate(spec: ArchSpec, par: Parallelism, cfg: SystemConfig, *,
              batch: int, seq: int, mode: str = "train",
              objective: str = "perf_per_bw",

@@ -1,0 +1,442 @@
+"""The scenario layer: what workload shape is the cluster being designed for?
+
+COSMIC's co-design loop is scenario-agnostic — the paper evaluates training,
+serving, and mixed clusters with the same PsA/agent machinery.  A
+``Scenario`` packages everything workload-shape-specific behind three
+methods:
+
+  * ``psa_params()`` / ``psa_constraints(n_npus)`` — the searchable knobs
+    this scenario contributes to the PsA (stack ``"scenario"``), searched by
+    agents alongside the workload/collective/network stacks;
+  * ``traces(ctx)`` — the symbolic phase traces behind one design point
+    (inspection/debug);
+  * ``evaluate(ctx)`` — design point -> ``Evaluation`` (reward, latency,
+    validity gate), where ``ctx`` is the env-resolved ``EnvContext``.
+
+Three built-ins:
+
+  ``TrainScenario``        one homogeneous training (or monolithic-serving)
+                           job — bit-identical to the pre-scenario engine.
+  ``DisaggServeScenario``  disaggregated serving: separate prefill and
+                           decode NPU pools sized by a searchable
+                           ``prefill_frac``, a KV-cache transfer collective
+                           between pools, and decode continuous batching
+                           with a searchable ``decode_batch``.
+  ``MultiTenantScenario``  N workloads on disjoint (possibly heterogeneous)
+                           cluster partitions whose sizes are searchable;
+                           reward is weighted SLO attainment.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from typing import Any, Mapping, Protocol, runtime_checkable
+
+from repro.configs.base import ArchSpec
+from repro.core.compute import DEVICES, Device
+from repro.core.memory import footprint, kv_cache_bytes
+from repro.core.psa import Constraint, Parameter, ParameterSet
+from repro.core.rewards import REWARDS, Evaluation, evaluate, slo_attainment
+from repro.core.simulator import SystemConfig, simulate
+from repro.core.topology import (Cluster, Network, partition_cluster,
+                                 sub_network)
+from repro.core.workload import (Parallelism, Trace, compose_phases,
+                                 generate_trace)
+
+
+@dataclass(frozen=True)
+class EnvContext:
+    """Everything the env resolves before handing a design point to its
+    scenario: the fixed system description plus the per-point config and the
+    network/system stacks built from it."""
+    spec: ArchSpec
+    n_npus: int
+    device: Device
+    objective: str
+    capacity_gb: float
+    config: Mapping[str, Any]
+    network: Network
+    sys_cfg: SystemConfig
+
+    def parallelism(self, n_npus: int | None = None) -> Parallelism:
+        """The config's workload-stack knobs resolved against a pool size."""
+        c = self.config
+        return Parallelism(n_npus if n_npus is not None else self.n_npus,
+                           c["dp"], c["sp"], c["pp"],
+                           bool(c["weight_sharded"]))
+
+
+@runtime_checkable
+class Scenario(Protocol):
+    """Structural protocol — any frozen, picklable object with these methods
+    can drive ``CosmicEnv`` (process-pool workers receive a copy)."""
+
+    name: str
+
+    def psa_params(self) -> list[Parameter]: ...
+    def psa_constraints(self, n_npus: int) -> list[Constraint]: ...
+    def traces(self, ctx: EnvContext) -> dict[str, Trace]: ...
+    def evaluate(self, ctx: EnvContext) -> Evaluation: ...
+
+
+def scenario_psa(base: ParameterSet, scenario: Scenario,
+                 n_npus: int) -> ParameterSet:
+    """The base PsA extended with the scenario's searchable knobs — the
+    'scenario' stack of the design space."""
+    params = scenario.psa_params()
+    if not params:
+        return base
+    return base.extend(params, scenario.psa_constraints(n_npus),
+                       name=f"{base.name}+{scenario.name}")
+
+
+def _invalid(why: str) -> Evaluation:
+    return Evaluation(0.0, float("inf"), False, {"why": why})
+
+
+# ---------------------------------------------------------------------------
+# TrainScenario — the pre-scenario engine, verbatim
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TrainScenario:
+    """One homogeneous job on the whole cluster: the engine's original
+    behavior (``mode="train"`` training step latency, or ``mode="serve"``
+    monolithic prefill+decode serving), reward-identical to the
+    pre-scenario code path."""
+    batch: int
+    seq: int
+    mode: str = "train"            # train | serve | inference
+    decode_tokens: int = 64
+    name: str = "train"
+
+    def psa_params(self) -> list[Parameter]:
+        return []
+
+    def psa_constraints(self, n_npus: int) -> list[Constraint]:
+        return []
+
+    def traces(self, ctx: EnvContext) -> dict[str, Trace]:
+        par = ctx.parallelism()
+        if self.mode == "serve":
+            return {"prefill": generate_trace(ctx.spec, par, batch=self.batch,
+                                              seq=self.seq, mode="prefill"),
+                    "decode": generate_trace(ctx.spec, par, batch=self.batch,
+                                             seq=self.seq, mode="decode")}
+        return {self.mode: generate_trace(ctx.spec, par, batch=self.batch,
+                                          seq=self.seq, mode=self.mode)}
+
+    def evaluate(self, ctx: EnvContext) -> Evaluation:
+        return evaluate(ctx.spec, ctx.parallelism(), ctx.sys_cfg,
+                        batch=self.batch, seq=self.seq, mode=self.mode,
+                        objective=ctx.objective, capacity_gb=ctx.capacity_gb,
+                        decode_tokens=self.decode_tokens)
+
+
+# ---------------------------------------------------------------------------
+# DisaggServeScenario — prefill/decode disaggregation
+# ---------------------------------------------------------------------------
+
+def _compose_memo(pre: Trace, dec: Trace, xfer_bytes: float,
+                  meta: dict[str, Any]) -> Trace:
+    """compose_phases memoized by input-trace identity: phase traces are
+    interned by the trace cache, so repeated design points sharing them get
+    the same composed trace (and its piggybacked ``_SimPlan``) back.  The
+    memo rides on the prefill trace, dying with it when caches are off."""
+    memo = getattr(pre, "_composed", None)
+    if memo is None:
+        memo = pre._composed = {}
+    # entries hold a strong ref to their decode trace, so a live key's id
+    # can't be recycled by a different (evicted-and-rebuilt) trace
+    key = (id(dec), xfer_bytes)
+    entry = memo.get(key)
+    if entry is None or entry[0] is not dec:
+        tr = compose_phases([(pre, 0), (dec, 1)],
+                            transfers=[xfer_bytes], meta=meta)
+        memo[key] = entry = (dec, tr)
+    return entry[1]
+
+
+@dataclass(frozen=True)
+class DisaggServeScenario:
+    """Disaggregated serving: ``prefill_frac`` of the cluster prefills
+    prompts, the rest decodes, and finished prompts hand their KV caches
+    across a transfer collective bridging the pools.
+
+    The prefill pool is parallelized by the config's workload knobs; the
+    decode pool is carved into ``ceil(batch / decode_batch)`` continuous-
+    batching replicas, each tensor-parallel over its share of the pool —
+    so the search can give prefill its MXU-efficient moderate TP while
+    decode shards weight/KV reads as widely as the pool allows.
+
+    ``prefill_frac = 1.0`` degenerates to the monolithic serve path
+    (``TrainScenario(mode="serve")``): one pool, one parallelization for
+    both phases, no transfer.
+    """
+    batch: int
+    seq: int
+    decode_tokens: int = 64
+    prefill_fracs: tuple = (0.25, 0.5, 0.625, 0.75, 0.875, 1.0)
+    decode_batches: tuple = (4, 8, 16, 32, 64, 128)
+    name: str = "disagg-serve"
+
+    def psa_params(self) -> list[Parameter]:
+        return [
+            Parameter("prefill_frac", "scenario", self.prefill_fracs,
+                      doc="fraction of the cluster in the prefill pool"),
+            Parameter("decode_batch", "scenario", self.decode_batches,
+                      doc="requests continuously batched per decode replica"),
+        ]
+
+    def psa_constraints(self, n_npus: int) -> list[Constraint]:
+        return []
+
+    def canonical(self, config: Mapping[str, Any]) -> Mapping[str, Any]:
+        """Memo-key canonicalization: at ``prefill_frac >= 1.0`` the decode
+        pool doesn't exist and ``decode_batch`` is ignored, so all its
+        values are one design point — don't re-evaluate them."""
+        if float(config.get("prefill_frac", 0.0)) >= 1.0 \
+                and "decode_batch" in config:
+            return dict(config, decode_batch=self.decode_batches[0])
+        return config
+
+    # -- pool sizing -------------------------------------------------------
+    def _pools(self, ctx: EnvContext) -> tuple[int, int]:
+        frac = float(ctx.config["prefill_frac"])
+        n_pre = int(round(frac * ctx.n_npus))
+        return n_pre, ctx.n_npus - n_pre
+
+    def _decode_par(self, n_dec: int, decode_batch: int) -> tuple[Parallelism, int, int]:
+        """(decode-pool parallelism, waves, resident requests): ``replicas``
+        continuous-batching groups of up to ``decode_batch`` requests, each
+        TP over its pool share."""
+        replicas = min(n_dec, max(1, math.ceil(self.batch / decode_batch)))
+        tp = n_dec // replicas
+        par = Parallelism(replicas * tp, dp=replicas, sp=1, pp=1)
+        waves = math.ceil(self.batch / (replicas * decode_batch))
+        # no more requests can be in flight than exist
+        resident = min(decode_batch * replicas, self.batch)
+        return par, waves, resident
+
+    def _phase_traces(self, ctx: EnvContext, par_pre: Parallelism,
+                      par_dec: Parallelism, resident: int) -> tuple[Trace, Trace, Trace]:
+        pre = generate_trace(ctx.spec, par_pre, batch=self.batch,
+                             seq=self.seq, mode="prefill")
+        dec = generate_trace(ctx.spec, par_dec, batch=resident,
+                             seq=self.seq, mode="decode")
+        # prefill -> KV transfer -> first decode step, on separate pools
+        combined = _compose_memo(
+            pre, dec, self._xfer_bytes(ctx, par_pre.n_npus, par_dec.n_npus),
+            meta=dict(arch=ctx.spec.name, scenario=self.name))
+        return pre, dec, combined
+
+    def traces(self, ctx: EnvContext) -> dict[str, Trace]:
+        if float(ctx.config["prefill_frac"]) >= 1.0:
+            return TrainScenario(self.batch, self.seq, "serve",
+                                 self.decode_tokens).traces(ctx)
+        n_pre, n_dec = self._pools(ctx)
+        if n_pre < 1 or n_dec < 1:
+            raise ValueError(f"degenerate pool split {n_pre}/{n_dec} for "
+                             f"prefill_frac={ctx.config['prefill_frac']} on "
+                             f"{ctx.n_npus} NPUs")
+        par_dec, _, resident = self._decode_par(n_dec,
+                                                int(ctx.config["decode_batch"]))
+        pre, dec, combined = self._phase_traces(ctx, ctx.parallelism(n_pre),
+                                                par_dec, resident)
+        return {"prefill": pre, "decode": dec, "combined": combined}
+
+    def _xfer_bytes(self, ctx: EnvContext, n_pre: int, n_dec: int) -> float:
+        """KV handoff per transfer lane: the whole batch's caches move, with
+        one concurrent lane per (prefill, decode) NPU pair."""
+        total = kv_cache_bytes(ctx.spec, batch=self.batch, seq=self.seq)
+        return total / max(1, min(n_pre, n_dec))
+
+    def evaluate(self, ctx: EnvContext) -> Evaluation:
+        frac = float(ctx.config["prefill_frac"])
+        if frac >= 1.0:
+            # degenerate: one pool serves both phases (the monolithic path)
+            ev = TrainScenario(self.batch, self.seq, "serve",
+                               self.decode_tokens).evaluate(ctx)
+            if ev.valid:
+                ev = replace(ev, detail=dict(ev.detail, scenario=self.name,
+                                             monolithic=True))
+            return ev
+        decode_batch = int(ctx.config["decode_batch"])
+        n_pre, n_dec = self._pools(ctx)
+        if n_pre < 1 or n_dec < 1:
+            return _invalid(f"degenerate pool split {n_pre}/{n_dec}")
+        par_pre = ctx.parallelism(n_pre)
+        if not par_pre.valid():
+            return _invalid(f"prefill parallelization invalid on {n_pre} NPUs")
+        fp_pre = footprint(ctx.spec, par_pre, batch=self.batch, seq=self.seq,
+                           mode="inference")
+        if fp_pre.total_gb > ctx.capacity_gb:
+            return _invalid(f"prefill memory {fp_pre.total_gb:.1f}GB "
+                            f"> {ctx.capacity_gb}GB")
+        par_dec, waves, resident = self._decode_par(n_dec, decode_batch)
+        fp_dec = footprint(ctx.spec, par_dec, batch=resident, seq=self.seq,
+                           mode="decode")
+        if fp_dec.total_gb > ctx.capacity_gb:
+            return _invalid(f"decode memory {fp_dec.total_gb:.1f}GB "
+                            f"> {ctx.capacity_gb}GB")
+
+        _, dec_tr, combined = self._phase_traces(ctx, par_pre, par_dec,
+                                                 resident)
+        # each pool's collectives are priced on the sub-fabric its NPU
+        # slice spans, not the whole cluster (same carving rule as
+        # MultiTenantScenario partitions)
+        pre_pool = (par_pre, sub_network(ctx.network, par_pre.n_npus))
+        dec_pool = (par_dec, sub_network(ctx.network, par_dec.n_npus))
+        first = simulate(combined, ctx.sys_cfg, par_pre,
+                         pools={0: pre_pool, 1: dec_pool})
+        step = simulate(dec_tr, ctx.sys_cfg, par_dec,
+                        pools={0: dec_pool})
+        t_token_ms = step.latency_ms
+        latency_ms = first.latency_ms \
+            + (self.decode_tokens * waves - 1) * t_token_ms
+        r = REWARDS[ctx.objective](latency_ms, ctx.sys_cfg.network)
+        return Evaluation(r, latency_ms, True, {
+            "scenario": self.name, "prefill_npus": n_pre,
+            "decode_npus": par_dec.n_npus, "decode_tp": par_dec.tp,
+            "decode_replicas": par_dec.dp, "decode_batch": decode_batch,
+            "waves": waves, "ttft_ms": first.latency_ms - t_token_ms,
+            "p50_token_latency_ms": t_token_ms,
+            "prefill_gb": fp_pre.total_gb, "decode_gb": fp_dec.total_gb,
+        })
+
+
+# ---------------------------------------------------------------------------
+# MultiTenantScenario — N workloads on disjoint heterogeneous partitions
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Tenant:
+    """One workload sharing the cluster: an architecture, its batch/seq, a
+    latency SLO, and an importance weight.  ``device_name`` installs a
+    different compute device in this tenant's partition (heterogeneous
+    clusters); empty inherits the env device."""
+    name: str
+    arch: ArchSpec
+    batch: int
+    seq: int
+    phase: str = "train"           # train | serve
+    slo_ms: float = 1e4
+    weight: float = 1.0
+    decode_tokens: int = 64
+    device_name: str = ""
+
+
+def _auto_parallelism(spec: ArchSpec, n: int, batch: int, phase: str,
+                      seq: int, capacity_gb: float) -> Parallelism | None:
+    """Deterministic per-tenant parallelization: the least tensor sharding
+    (fewest collectives) whose footprint fits the capacity gate."""
+    mode = "train" if phase == "train" else "inference"
+    tp = 1
+    while tp <= n:
+        if n % tp == 0:
+            dp = n // tp
+            par = Parallelism(n, dp=dp, sp=1, pp=1,
+                              weight_sharded=(phase == "train" and dp > 1))
+            if dp <= max(batch, 1) and \
+                    footprint(spec, par, batch=batch, seq=seq,
+                              mode=mode).total_gb <= capacity_gb:
+                return par
+        tp *= 2
+    return None
+
+
+@dataclass(frozen=True)
+class MultiTenantScenario:
+    """N tenants on disjoint partitions of one fabric.  The partition sizes
+    are searchable (``tenant_npus``, one slot per tenant, summing to at most
+    the cluster); each partition runs its tenant's workload on its own
+    sub-network and device.  Reward is importance-weighted SLO attainment;
+    oversubscribed or infeasible partitions gate to reward 0.  NOTE: the
+    SLO objective is intrinsic to the scenario — ``ctx.objective`` is not
+    consulted (per-tenant latencies and weighted goodput are in ``detail``
+    for callers wanting other aggregations)."""
+    tenants: tuple[Tenant, ...]
+    size_choices: tuple = (32, 64, 128, 256, 512, 1024)
+    name: str = "multi-tenant"
+
+    def psa_params(self) -> list[Parameter]:
+        return [Parameter("tenant_npus", "scenario", self.size_choices,
+                          ndim=len(self.tenants),
+                          doc="NPUs owned by each tenant's partition")]
+
+    def psa_constraints(self, n_npus: int) -> list[Constraint]:
+        return [Constraint("sum_le", ("tenant_npus",), n_npus,
+                           name=f"sum(tenant_npus) <= {n_npus}")]
+
+    def _cluster(self, ctx: EnvContext, sizes: tuple[int, ...]) -> Cluster:
+        devices = [DEVICES[t.device_name] if t.device_name else ctx.device
+                   for t in self.tenants]
+        return partition_cluster(ctx.network, sizes, devices,
+                                 names=[t.name for t in self.tenants])
+
+    def _sizes(self, ctx: EnvContext) -> tuple[int, ...]:
+        v = ctx.config["tenant_npus"]
+        return tuple(int(x) for x in (v if isinstance(v, (tuple, list)) else (v,)))
+
+    def traces(self, ctx: EnvContext) -> dict[str, Trace]:
+        out: dict[str, Trace] = {}
+        for t, size in zip(self.tenants, self._sizes(ctx)):
+            par = _auto_parallelism(t.arch, size, t.batch, t.phase, t.seq,
+                                    ctx.capacity_gb)
+            if par is not None:
+                out[t.name] = generate_trace(
+                    t.arch, par, batch=t.batch, seq=t.seq,
+                    mode="train" if t.phase == "train" else "prefill")
+        return out
+
+    def _tenant_latency_ms(self, ctx: EnvContext, t: Tenant,
+                           network: Network, device: Device,
+                           par: Parallelism) -> float:
+        sys_cfg = replace(ctx.sys_cfg, network=network, device=device)
+        if t.phase == "serve":
+            pre = simulate(generate_trace(t.arch, par, batch=t.batch,
+                                          seq=t.seq, mode="prefill"),
+                           sys_cfg, par)
+            dec = simulate(generate_trace(t.arch, par, batch=t.batch,
+                                          seq=t.seq, mode="decode"),
+                           sys_cfg, par)
+            return pre.latency_ms + t.decode_tokens * dec.latency_ms
+        tr = generate_trace(t.arch, par, batch=t.batch, seq=t.seq, mode="train")
+        return simulate(tr, sys_cfg, par).latency_ms
+
+    def evaluate(self, ctx: EnvContext) -> Evaluation:
+        sizes = self._sizes(ctx)
+        if len(sizes) != len(self.tenants):
+            return _invalid(f"need {len(self.tenants)} partition sizes, "
+                            f"got {len(sizes)}")
+        if sum(sizes) > ctx.n_npus:
+            return _invalid(f"partitions {list(sizes)} oversubscribe "
+                            f"{ctx.n_npus}-NPU cluster")
+        cluster = self._cluster(ctx, sizes)
+        per_tenant: dict[str, dict[str, float]] = {}
+        attained, weight_sum, goodput = 0.0, 0.0, 0.0
+        worst = 0.0
+        for t, part in zip(self.tenants, cluster.partitions):
+            par = _auto_parallelism(t.arch, part.n_npus, t.batch, t.phase,
+                                    t.seq, ctx.capacity_gb)
+            if par is None:
+                return _invalid(f"tenant {t.name!r} infeasible on "
+                                f"{part.n_npus} NPUs")
+            lat = self._tenant_latency_ms(ctx, t, part.network, part.device, par)
+            att = slo_attainment(lat, t.slo_ms)
+            tput = t.batch * t.seq / max(lat, 1e-9)  # tokens/ms
+            attained += t.weight * att
+            goodput += t.weight * tput * (1.0 if lat <= t.slo_ms else 0.0)
+            weight_sum += t.weight
+            worst = max(worst, lat)
+            per_tenant[t.name] = {
+                "npus": part.n_npus, "range": part.npu_range(),
+                "latency_ms": lat, "slo_ms": t.slo_ms, "attainment": att,
+                "tp": par.tp, "dp": par.dp,
+            }
+        reward = attained / max(weight_sum, 1e-9)
+        return Evaluation(reward, worst, True, {
+            "scenario": self.name, "tenants": per_tenant,
+            "weighted_goodput_tok_per_ms": goodput,
+            "cluster": cluster.describe(),
+        })

@@ -18,7 +18,6 @@ resolved once per call rather than once per op.
 from __future__ import annotations
 
 import heapq
-import math
 from dataclasses import dataclass, field
 from typing import Any, Sequence
 
@@ -26,7 +25,7 @@ import numpy as np
 
 from repro.core.collectives import multidim_collective_time_us
 from repro.core.compute import Device
-from repro.core.topology import Network, TopoDim
+from repro.core.topology import Network, TopoDim, carve_dims
 from repro.core.workload import Op, Parallelism, Trace
 
 
@@ -39,6 +38,11 @@ class SystemConfig:
     chunks: int = 1
     sched_policy: str = "fifo"          # lifo | fifo
     multidim_coll: str = "baseline"     # baseline | blueconnect
+    # cross-partition transfer engine (multi-pool scenarios: KV-cache
+    # handoff between disaggregated pools).  None rides the outermost —
+    # scale-out — network dim's link speed.
+    xfer_bw: float | None = None        # GB/s per transfer lane
+    xfer_latency_us: float = 5.0
 
 
 def group_dims(net: Network, par: Parallelism) -> dict[str, list[TopoDim]]:
@@ -46,24 +50,16 @@ def group_dims(net: Network, par: Parallelism) -> dict[str, list[TopoDim]]:
     TP gets the inner (fastest) dims, then EP(=TP group), SP, DP, PP.
 
     When a group covers part of a dim, a virtual TopoDim with the residual
-    group size (same kind/bw) approximates the sub-ring/sub-switch."""
+    group size (same kind/bw) approximates the sub-ring/sub-switch.  A group
+    factor sharing no divisor with any dim (non-power-of-two pools from
+    disaggregated/partitioned scenarios) becomes a virtual dim at the
+    outermost — slowest — tier so its collectives are never free."""
     sizes = {"tp": par.tp, "sp": par.sp, "dp": par.dp, "pp": par.pp}
-    out: dict[str, list[TopoDim]] = {g: [] for g in ("tp", "sp", "dp", "pp")}
-    dim_iter = list(net.dims)
-    cap = [d.npus for d in dim_iter]
-    for grp in ("tp", "sp", "dp", "pp"):
-        need = sizes[grp]
-        for i, d in enumerate(dim_iter):
-            if need <= 1:
-                break
-            if cap[i] <= 1:
-                continue
-            take = math.gcd(need, cap[i])
-            if take <= 1:
-                continue
-            out[grp].append(TopoDim(d.kind, take, d.bw, d.latency_us))
-            cap[i] //= take
-            need //= take
+    cap = [d.npus for d in net.dims]  # consumed across groups, in order
+    out: dict[str, list[TopoDim]] = {
+        grp: carve_dims(net.dims, cap, sizes[grp])
+        for grp in ("tp", "sp", "dp", "pp")
+    }
     out["ep"] = out["tp"]  # expert-parallel collectives ride the TP group
     return out
 
@@ -71,10 +67,11 @@ def group_dims(net: Network, par: Parallelism) -> dict[str, list[TopoDim]]:
 @dataclass
 class SimResult:
     makespan_us: float
-    compute_busy_us: float
+    compute_busy_us: float              # pool-0 compute stream (back-compat)
     comm_busy_us: dict[str, float]
     exposed_comm_us: float
     per_op_us: dict[int, float] = field(default_factory=dict)
+    pool_compute_us: dict[int, float] = field(default_factory=dict)
 
     @property
     def latency_ms(self) -> float:
@@ -97,9 +94,12 @@ class _SimPlan:
 
     Ops carry dense uids (0..n-1 in issue order), so dependency bookkeeping
     lives in flat lists instead of dicts.  Resources are small integer ids;
-    id 0 is always the compute stream."""
+    id 0 is always pool 0's compute stream.  Every pool gets its own compute
+    stream and comm engines; cross-partition ``xfer`` collectives share one
+    transfer resource."""
     n_ops: int
     res_names: list[str]                # per resource id: "compute" | group
+    res_pool: list[int]                 # per resource id: owning pool
     res_of: list[int]                   # per op: resource id
     ndeps0: list[int]
     children: list[list[int]]
@@ -107,7 +107,8 @@ class _SimPlan:
     comp_uids: np.ndarray
     comp_flops: np.ndarray
     comp_bytes: np.ndarray
-    coll_ops: list[tuple[int, str, float, str]]   # (uid, coll, size, group)
+    coll_ops: list[tuple[int, str, float, str, int]]  # (uid, coll, size, group, pool)
+    pools: tuple[int, ...]
 
 
 def _sim_plan(trace: Trace) -> _SimPlan:
@@ -119,7 +120,8 @@ def _sim_plan(trace: Trace) -> _SimPlan:
         raise ValueError("simulate() requires dense op uids (0..n-1 in list "
                          "order) — build traces with TraceBuilder")
     res_names = ["compute"]
-    res_index: dict[str, int] = {"compute": 0}
+    res_pool = [0]
+    res_index: dict[tuple[int, str], int] = {(0, "compute"): 0}
     res_of = [0] * n
     ndeps0 = [0] * n
     children: list[list[int]] = [[] for _ in range(n)]
@@ -127,39 +129,55 @@ def _sim_plan(trace: Trace) -> _SimPlan:
     comp_idx: list[int] = []
     comp_flops: list[float] = []
     comp_bytes: list[float] = []
-    coll_ops: list[tuple[int, str, float, str]] = []
+    coll_ops: list[tuple[int, str, float, str, int]] = []
+    pools: set[int] = {0}
+
+    def resource(pool: int, name: str) -> int:
+        rid = res_index.get((pool, name))
+        if rid is None:
+            rid = len(res_names)
+            res_index[(pool, name)] = rid
+            res_names.append(name)
+            res_pool.append(pool)
+        return rid
+
     for op in trace.ops:
+        pools.add(op.pool)
         if op.kind == "comp":
-            res_of[op.uid] = 0
+            res_of[op.uid] = resource(op.pool, "compute")
             comp_idx.append(op.uid)
             comp_flops.append(op.flops)
             comp_bytes.append(op.bytes)
         else:
-            name = f"net:{op.group}"
-            rid = res_index.get(name)
-            if rid is None:
-                rid = len(res_names)
-                res_index[name] = rid
-                res_names.append(op.group)
-            res_of[op.uid] = rid
-            coll_ops.append((op.uid, op.coll, op.size_bytes, op.group))
+            # the transfer engine bridges partitions: one shared resource
+            pool = 0 if op.group == "xfer" else op.pool
+            res_of[op.uid] = resource(pool, op.group)
+            coll_ops.append((op.uid, op.coll, op.size_bytes, op.group, op.pool))
         ndeps0[op.uid] = len(op.deps)
         if not op.deps:
             roots.append(op.uid)
         for d in op.deps:
             children[d].append(op.uid)
-    plan = _SimPlan(n_ops=n, res_names=res_names, res_of=res_of,
-                    ndeps0=ndeps0, children=children, roots=roots,
+    plan = _SimPlan(n_ops=n, res_names=res_names, res_pool=res_pool,
+                    res_of=res_of, ndeps0=ndeps0, children=children,
+                    roots=roots,
                     comp_uids=np.array(comp_idx, dtype=np.intp),
                     comp_flops=np.array(comp_flops, dtype=np.float64),
                     comp_bytes=np.array(comp_bytes, dtype=np.float64),
-                    coll_ops=coll_ops)
+                    coll_ops=coll_ops, pools=tuple(sorted(pools)))
     trace._sim_plan = plan  # traces are cached + immutable; piggyback the plan
     return plan
 
 
+def _xfer_time_us(cfg: SystemConfig, size_bytes: float) -> float:
+    """Cross-partition transfer: latency + bytes over the transfer lane
+    (callers pre-divide the payload by the number of parallel lanes)."""
+    bw = cfg.xfer_bw if cfg.xfer_bw is not None else cfg.network.dims[-1].bw
+    return cfg.xfer_latency_us + (size_bytes / bw) * 1e-3
+
+
 def _op_durations(plan: _SimPlan, cfg: SystemConfig,
-                  gdims: dict[str, list[TopoDim]]) -> list[float]:
+                  gdims_by_pool: dict[int, dict[str, list[TopoDim]]]) -> list[float]:
     """Duration of every op: vectorized roofline for the compute ops, the
     memoized collective model for the comm ops."""
     arr = np.zeros(plan.n_ops, dtype=np.float64)
@@ -167,29 +185,50 @@ def _op_durations(plan: _SimPlan, cfg: SystemConfig,
         arr[plan.comp_uids] = cfg.device.op_times_us(plan.comp_flops,
                                                      plan.comp_bytes)
     dur = arr.tolist()
-    group_nets = {g: _group_net(cfg, dims) for g, dims in gdims.items()}
+    group_nets = {(pool, g): _group_net(cfg, dims)
+                  for pool, gdims in gdims_by_pool.items()
+                  for g, dims in gdims.items()}
     chunks, mode = cfg.chunks, cfg.multidim_coll
-    local: dict[tuple[str, str, float], float] = {}  # layers repeat shapes
-    for uid, coll, size, group in plan.coll_ops:
-        key = (group, coll, size)
+    local: dict[tuple[int, str, str, float], float] = {}  # layers repeat shapes
+    for uid, coll, size, group, pool in plan.coll_ops:
+        key = (pool, group, coll, size)
         t = local.get(key)
         if t is None:
-            resolved = group_nets.get(group)
-            if resolved is None:
-                t = 0.0
+            if group == "xfer":
+                t = _xfer_time_us(cfg, size)
             else:
-                sub, algos = resolved
-                t = multidim_collective_time_us(coll, size, sub, algos,
-                                                chunks=chunks, mode=mode)
+                resolved = group_nets.get((pool, group))
+                if resolved is None:
+                    t = 0.0
+                else:
+                    sub, algos = resolved
+                    t = multidim_collective_time_us(coll, size, sub, algos,
+                                                    chunks=chunks, mode=mode)
             local[key] = t
         dur[uid] = t
     return dur
 
 
-def simulate(trace: Trace, cfg: SystemConfig, par: Parallelism) -> SimResult:
+def simulate(trace: Trace, cfg: SystemConfig, par: Parallelism, *,
+             pools: dict[int, Parallelism | tuple[Parallelism, Network]] | None = None,
+             record_per_op: bool = False) -> SimResult:
+    """Schedule ``trace`` on the device + network of ``cfg``.
+
+    ``pools`` maps pool id -> that partition's Parallelism for multi-pool
+    traces (default: every op belongs to pool 0, parallelized by ``par``).
+    A ``(Parallelism, Network)`` value prices the pool's collectives on the
+    sub-fabric its NPU slice actually spans instead of the whole cluster.
+    ``record_per_op`` opts into materializing ``SimResult.per_op_us`` — off
+    by default because the batched DSE hot path never reads it."""
     plan = _sim_plan(trace)
-    gdims = group_dims(cfg.network, par)
-    dur = _op_durations(plan, cfg, gdims)
+    if pools is None:
+        pools = {p: par for p in plan.pools}
+    gdims_by_pool = {}
+    for p in plan.pools:
+        entry = pools.get(p, par)
+        par_p, net_p = entry if isinstance(entry, tuple) else (entry, cfg.network)
+        gdims_by_pool[p] = group_dims(net_p, par_p)
+    dur = _op_durations(plan, cfg, gdims_by_pool)
 
     n_res = len(plan.res_names)
     ndeps = list(plan.ndeps0)
@@ -248,12 +287,23 @@ def simulate(trace: Trace, cfg: SystemConfig, par: Parallelism) -> SimResult:
     if n_finished != plan.n_ops:
         raise RuntimeError(f"deadlock: {n_finished}/{plan.n_ops} ops finished")
 
-    compute_busy = busy[0]
-    comm_busy = {plan.res_names[r]: busy[r] for r in range(1, n_res)}
+    pool_compute = {plan.res_pool[r]: busy[r]
+                    for r in range(n_res) if plan.res_names[r] == "compute"}
+    comm_busy: dict[str, float] = {}
+    for r in range(n_res):
+        name = plan.res_names[r]
+        if name == "compute":
+            continue
+        key = name if plan.res_pool[r] == 0 else f"{name}@p{plan.res_pool[r]}"
+        comm_busy[key] = comm_busy.get(key, 0.0) + busy[r]
     return SimResult(
         makespan_us=makespan,
-        compute_busy_us=compute_busy,
+        compute_busy_us=pool_compute.get(0, 0.0),
         comm_busy_us=comm_busy,
-        exposed_comm_us=max(0.0, makespan - compute_busy),
-        per_op_us=dict(enumerate(dur)),
+        # time covered by no compute stream; pools chain/overlap, so the
+        # aggregate compute across pools is the honest subtrahend (for a
+        # single pool this is exactly the old makespan - compute_busy)
+        exposed_comm_us=max(0.0, makespan - sum(pool_compute.values())),
+        per_op_us=dict(enumerate(dur)) if record_per_op else {},
+        pool_compute_us=pool_compute,
     )

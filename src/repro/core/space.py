@@ -99,10 +99,12 @@ class DesignSpace:
         if c.kind == "predicate":
             return bool(c.fn(config))
         slots = self.pset.expand_constraint_params(c)
+        target = config[c.target] if isinstance(c.target, str) else c.target
+        if c.kind == "sum_le":
+            return sum(self._slot_value(config, s) for s in slots) <= target
         prod = 1
         for s in slots:
             prod *= self._slot_value(config, s)
-        target = config[c.target] if isinstance(c.target, str) else c.target
         if c.kind == "product_eq":
             return prod == target
         if c.kind == "product_le":
@@ -134,6 +136,8 @@ class DesignSpace:
                 if not slots:
                     break
                 if c.kind in ("product_eq", "product_le") and self._try_factor_repair(config, c, rng):
+                    continue
+                if c.kind == "sum_le" and self._try_sum_repair(config, c, rng):
                     continue
                 s = slots[int(rng.integers(len(slots)))]
                 self._set_slot(config, s, self._random_choice(s, rng))
@@ -194,6 +198,42 @@ class DesignSpace:
                     rem //= v
                 else:
                     rem = max(rem // v, 1)
+            if ok:
+                for s, v in vals.items():
+                    self._set_slot(config, s, v)
+                if self._check(config, c):
+                    return True
+        return False
+
+    def _try_sum_repair(self, config: dict[str, Any], c: Constraint,
+                        rng: np.random.Generator) -> bool:
+        """Exact repair for sum budgets (partition sizes): greedily resample
+        each slot from the choices that still fit the remaining budget."""
+        target = config[c.target] if isinstance(c.target, str) else c.target
+        all_slots = self.pset.expand_constraint_params(c)
+        slots = [s for s in all_slots if self._slot_mutable(s)]
+        if not slots:
+            return False
+        # immutable (fixed) slots spend budget the repair can't touch
+        budget = target - sum(
+            v for s in all_slots if not self._slot_mutable(s)
+            and isinstance((v := self._slot_value(config, s)), (int, float)))
+        for _ in range(32):
+            rem = budget
+            vals = {}
+            order = list(slots)
+            rng.shuffle(order)
+            ok = True
+            for s in order:
+                g = self.genes[self._index[s]]
+                fitting = [v for v in g.choices
+                           if isinstance(v, (int, float)) and v <= rem]
+                if not fitting:
+                    ok = False
+                    break
+                v = fitting[int(rng.integers(len(fitting)))]
+                vals[s] = v
+                rem -= v
             if ok:
                 for s, v in vals.items():
                     self._set_slot(config, s, v)

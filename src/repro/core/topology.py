@@ -1,10 +1,19 @@
 """Multi-dimensional network fabrics from {Ring, Switch, FullyConnected}
 building blocks (paper Fig. 3), with link counts and a LIBRA-style dollar
-cost model for the Perf-per-Network-Cost reward."""
+cost model for the Perf-per-Network-Cost reward.
+
+Heterogeneous sub-partitions: a ``Cluster`` carves one physical fabric into
+disjoint ``Partition``s (an NPU range + the sub-network it spans + its own
+compute device), the substrate for multi-tenant DSE where each tenant owns a
+slice of a possibly heterogeneous machine."""
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
-from typing import Sequence
+from typing import TYPE_CHECKING, Sequence
+
+if TYPE_CHECKING:  # no runtime dep: compute.py never imports topology
+    from repro.core.compute import Device
 
 TOPO_KINDS = ("ring", "switch", "fc")
 
@@ -98,6 +107,89 @@ def build_network(topology: Sequence[str], npus_per_dim: Sequence[int],
         for t, n, b, l in zip(topology, npus_per_dim, bw_per_dim, latency_us)
     )
     return Network(dims)
+
+
+def carve_dims(dims: Sequence[TopoDim], caps: list[int],
+               need: int) -> list[TopoDim]:
+    """THE carving rule: gcd-take ``need`` NPUs from ``dims`` innermost
+    first, consuming the (mutated) per-dim capacities ``caps``; a residual
+    factor no dim covers becomes a virtual dim at the outermost — slowest —
+    tier's speed so its traffic is never free.  Shared by ``sub_network``
+    (partition fabrics) and ``simulator.group_dims`` (parallelism-group
+    mapping) so the two can't diverge."""
+    out: list[TopoDim] = []
+    for i, d in enumerate(dims):
+        if need <= 1:
+            break
+        if caps[i] <= 1:
+            continue
+        take = math.gcd(need, caps[i])
+        if take <= 1:
+            continue
+        out.append(TopoDim(d.kind, take, d.bw, d.latency_us))
+        caps[i] //= take
+        need //= take
+    if need > 1 and dims:
+        last = dims[-1]
+        out.append(TopoDim(last.kind, need, last.bw, last.latency_us))
+    return out
+
+
+def sub_network(net: Network, n: int) -> Network:
+    """The sub-fabric a contiguous group of ``n`` NPUs spans (see
+    ``carve_dims``), so a partition's collectives see the link tiers its
+    NPUs would actually occupy."""
+    return Network(tuple(carve_dims(net.dims, [d.npus for d in net.dims], n)))
+
+
+@dataclass(frozen=True)
+class Partition:
+    """A disjoint slice of a cluster: NPUs [offset, offset+n_npus), the
+    sub-network they span, and the compute device installed there (per-
+    partition devices are what makes a cluster heterogeneous)."""
+    name: str
+    offset: int
+    n_npus: int
+    network: Network
+    device: "Device"
+
+    def npu_range(self) -> tuple[int, int]:
+        return (self.offset, self.offset + self.n_npus)
+
+    def describe(self) -> str:
+        lo, hi = self.npu_range()
+        return f"{self.name}: npus[{lo}:{hi}) {self.device.name} {self.network.describe()}"
+
+
+@dataclass(frozen=True)
+class Cluster:
+    """Disjoint partitions of one physical fabric (multi-tenant substrate)."""
+    partitions: tuple[Partition, ...]
+    total_npus: int
+
+    def describe(self) -> str:
+        return " | ".join(p.describe() for p in self.partitions)
+
+
+def partition_cluster(net: Network, sizes: Sequence[int],
+                      devices: Sequence["Device"],
+                      names: Sequence[str] | None = None) -> Cluster:
+    """Carve ``net`` into disjoint partitions of ``sizes[i]`` NPUs with
+    ``devices[i]`` installed.  Raises if the sizes oversubscribe the fabric —
+    callers that search partition sizes gate that to reward 0 instead."""
+    if len(sizes) != len(devices):
+        raise ValueError(f"{len(sizes)} partition sizes but "
+                         f"{len(devices)} devices")
+    if sum(sizes) > net.n_npus:
+        raise ValueError(f"partitions {list(sizes)} oversubscribe "
+                         f"{net.n_npus}-NPU cluster")
+    parts = []
+    off = 0
+    for i, (n, dev) in enumerate(zip(sizes, devices)):
+        name = names[i] if names else f"part{i}"
+        parts.append(Partition(name, off, n, sub_network(net, n), dev))
+        off += n
+    return Cluster(tuple(parts), net.n_npus)
 
 
 # -- the paper's Table 3 systems -------------------------------------------

@@ -30,9 +30,27 @@ class Op:
     flops: float = 0.0
     bytes: float = 0.0
     # coll
-    coll: str = ""        # all_reduce | all_gather | reduce_scatter | all_to_all
+    coll: str = ""        # all_reduce | all_gather | reduce_scatter | all_to_all | xfer
     size_bytes: float = 0.0
-    group: str = ""       # tp | dp | ep | pp
+    group: str = ""       # tp | dp | ep | pp | xfer
+    # which partition's resources this op occupies (multi-pool scenarios:
+    # disaggregated prefill/decode pools get their own compute streams)
+    pool: int = 0
+
+
+# Scenario phases a trace can describe.  The legacy mode strings remain
+# accepted spellings ("inference" == "prefill"); traces are generated per
+# phase and scenarios compose phases into end-to-end evaluations.
+PHASES = ("train", "prefill", "decode")
+_PHASE_ALIASES = {"inference": "prefill"}
+
+
+def resolve_phase(mode: str) -> str:
+    phase = _PHASE_ALIASES.get(mode, mode)
+    if phase not in PHASES:
+        raise ValueError(f"unknown workload phase {mode!r}; "
+                         f"known: {PHASES + tuple(_PHASE_ALIASES)}")
+    return phase
 
 
 @dataclass(frozen=True)
@@ -144,17 +162,20 @@ def generate_trace(spec: ArchSpec, par: Parallelism, *, batch: int, seq: int,
     ``Trace`` built by the uncached expansion.  Callers must treat the
     returned trace as immutable (the simulator only reads it).
 
-    train:     fwd + bwd per layer, TP collectives on activation boundaries,
-               per-layer DP gradient reduction overlapping the backward pass,
-               PP pipeline-bubble factor on compute.
-    inference: fwd only (prefill); decode handled by per-token message sizes.
+    train:   fwd + bwd per layer, TP collectives on activation boundaries,
+             per-layer DP gradient reduction overlapping the backward pass,
+             PP pipeline-bubble factor on compute.
+    prefill: fwd only ("inference" accepted as a legacy spelling).
+    decode:  one-token steps against a KV cache (per-token message sizes).
     """
-    return _generate_trace_cached(spec, par, batch, seq, mode, microbatches)
+    return _generate_trace_cached(spec, par, batch, seq, resolve_phase(mode),
+                                  microbatches)
 
 
 def _generate_trace_impl(spec: ArchSpec, par: Parallelism, batch: int,
                          seq: int, mode: str,
                          microbatches: int | None) -> Trace:
+    mode = resolve_phase(mode)
     tb = TraceBuilder()
     b = batch / par.dp
     s = seq / par.sp
@@ -182,8 +203,11 @@ def _generate_trace_impl(spec: ArchSpec, par: Parallelism, batch: int,
         # one token with a KV cache of `seq`: per layer a GEMV over the
         # layer's weights + attention over the cache + a SMALL (b x d)
         # TP all-reduce — the latency-dominated regime where the paper's
-        # Expr-2 finds Direct/RHD/DBT beat Ring.
-        layers_d = spec.layer_defs()[: max(1, spec.n_layers // par.pp)]
+        # Expr-2 finds Direct/RHD/DBT beat Ring.  Unlike prefill/train,
+        # PP does NOT divide per-token latency: the token traverses every
+        # stage sequentially, paying a cross-stage hop at each boundary.
+        layers_d = spec.layer_defs()
+        n_l = len(layers_d)
         prev = []
         for i, ld in enumerate(layers_d):
             w_bytes = layer_pbytes(ld, BYTES_ACT)
@@ -193,6 +217,11 @@ def _generate_trace_impl(spec: ArchSpec, par: Parallelism, batch: int,
             if tp > 1:
                 u = tb.coll(f"L{i}.decode.ar", "all_reduce",
                             b * spec.d_model * BYTES_ACT, "tp", [u])
+            # exactly pp-1 stage-boundary hops under a balanced partition
+            if par.pp > 1 and i + 1 < n_l and \
+                    (i + 1) * par.pp // n_l != i * par.pp // n_l:
+                u = tb.coll(f"L{i}.decode.pp", "all_gather",
+                            b * spec.d_model * BYTES_ACT, "pp", [u])
             prev = [u]
         head_b = spec.d_model * spec.vocab_size / tp * BYTES_ACT
         tb.comp("head.decode", head_b * b, head_b, prev)
@@ -290,3 +319,36 @@ def _generate_trace_impl(spec: ArchSpec, par: Parallelism, batch: int,
 
 
 _generate_trace_cached = switchable_lru_cache(maxsize=4096)(_generate_trace_impl)
+
+
+def compose_phases(segments: list[tuple[Trace, int]],
+                   transfers: list[float] | tuple[float, ...] = (),
+                   meta: dict[str, Any] | None = None) -> Trace:
+    """Stitch per-pool phase traces into one multi-pool trace.
+
+    ``segments[i]`` is ``(trace, pool)``; phase i+1's roots depend on phase
+    i's tails.  ``transfers[i]`` (bytes) inserts a cross-partition transfer
+    collective (group ``"xfer"``, e.g. the KV-cache handoff between a
+    prefill and a decode pool) on that boundary; 0 means a bare dependency
+    edge.  Input traces are not mutated (they may be cache-interned)."""
+    ops: list[Op] = []
+    prev_tails: list[int] = []
+    for si, (tr, pool) in enumerate(segments):
+        off = len(ops)
+        has_children = {d for op in tr.ops for d in op.deps}
+        for op in tr.ops:
+            deps = [d + off for d in op.deps] if op.deps else list(prev_tails)
+            ops.append(Op(op.uid + off, f"s{si}.{op.name}", op.kind, deps,
+                          flops=op.flops, bytes=op.bytes, coll=op.coll,
+                          size_bytes=op.size_bytes, group=op.group, pool=pool))
+        tails = [op.uid + off for op in tr.ops if op.uid not in has_children]
+        size = transfers[si] if si < len(transfers) else 0.0
+        if size > 0 and si < len(segments) - 1:
+            uid = len(ops)
+            ops.append(Op(uid, f"s{si}.xfer", "coll", list(tails),
+                          coll="xfer", size_bytes=size, group="xfer",
+                          pool=pool))
+            prev_tails = [uid]
+        else:
+            prev_tails = tails
+    return Trace(ops, meta=dict(meta or {}, pools=sorted({p for _, p in segments})))
