@@ -63,6 +63,37 @@ def make_pset(system: str, *, stacks: set[str] | None = None, max_pp: int = 4) -
     return ps
 
 
+# multi-wave load point for the pipelined-vs-analytic disagg comparison
+# (shared by examples/dse_request_stream.py and benchmarks/serve_scenarios):
+# the small model's tp=1 decode replicas fit memory and decode_batch=2
+# forces the 512-request burst through 2 decode waves
+PIPELINE_COMPARE_ARCH = "qwen2-1.5b"
+PIPELINE_COMPARE_CFG = dict(
+    dp=8, sp=1, pp=1, weight_sharded=0, sched_policy="fifo",
+    coll_algo=("ring", "direct", "ring", "rhd"), chunks=2,
+    multidim_coll="baseline", topology=("ring", "fc", "ring", "switch"),
+    npus_per_dim=(4, 8, 4, 8), bw_per_dim=(400, 200, 150, 100),
+    prefill_frac=0.875, decode_batch=2)
+
+
+def compare_pipelined_vs_analytic(batch: int = 512, seq: int = 2048,
+                                  decode_tokens: int = 64) -> dict:
+    """Evaluate the fixed multi-wave point under both disagg trace models:
+    {True: pipelined Evaluation, False: analytic Evaluation}."""
+    from repro.core.scenario import DisaggServeScenario
+
+    out = {}
+    for pipelined in (True, False):
+        sc = DisaggServeScenario(batch, seq, decode_tokens,
+                                 pipelined=pipelined)
+        env = CosmicEnv(spec=ARCHS[PIPELINE_COMPARE_ARCH],
+                        n_npus=SYSTEMS["system2"][0],
+                        device=SYSTEMS["system2"][1], scenario=sc,
+                        objective="latency")
+        out[pipelined] = env.evaluate_config(PIPELINE_COMPARE_CFG)
+    return out
+
+
 def emit(rows: list[tuple]) -> None:
     """name,us_per_call,derived CSV lines (the run.py contract)."""
     for name, us, derived in rows:

@@ -1,17 +1,21 @@
 """Scenario sweep: monolithic serving vs disaggregated prefill/decode vs
-multi-tenant partitioning, each a full-stack GA search on gpt3-13b/system2.
+request-stream (arrival-driven, queueing) vs multi-tenant partitioning,
+each a full-stack GA search on gpt3-13b/system2.
 
 Rows report best end-to-end latency (serving), the disagg-vs-monolithic
-latency ratio (the disaggregation win), and weighted SLO attainment for the
-multi-tenant cluster.
+latency ratio (the disaggregation win), the pipelined-vs-analytic
+multi-wave ratio, SLO goodput + TTFT/TPOT percentiles for the request
+stream, and weighted SLO attainment for the multi-tenant cluster.
 """
 from __future__ import annotations
 
-from benchmarks.common import STEPS, SYSTEMS, emit, make_env, make_pset
+from benchmarks.common import (STEPS, SYSTEMS, compare_pipelined_vs_analytic,
+                               emit, make_env, make_pset)
 from repro.configs import ARCHS
 from repro.core.dse import run_search
 from repro.core.scenario import (DisaggServeScenario, MultiTenantScenario,
-                                 Tenant, TrainScenario, scenario_psa)
+                                 RequestStreamScenario, Tenant, TrainScenario,
+                                 scenario_psa)
 
 N_NPUS = SYSTEMS["system2"][0]
 
@@ -42,6 +46,29 @@ def run(steps: int | None = None) -> list[tuple]:
                  f"points_per_s={dis.points_per_s:.0f}"))
     rows.append(("serve_disagg_vs_monolithic", 0.0,
                  f"speedup=x{mono.best_latency_ms / max(dis.best_latency_ms, 1e-9):.2f}"))
+
+    # pipelined multi-wave trace vs analytic single-wave composition on a
+    # fixed multi-wave point (no search: the trace model is the variable)
+    cmp = compare_pipelined_vs_analytic()
+    rows.append(("serve_pipelined_vs_analytic", 0.0,
+                 f"pipelined_ms={cmp[True].latency_ms:.1f} "
+                 f"analytic_ms={cmp[False].latency_ms:.1f} "
+                 f"speedup=x{cmp[False].latency_ms / max(cmp[True].latency_ms, 1e-9):.3f}"))
+
+    stream_sc = RequestStreamScenario(n_requests=64, seq=2048,
+                                      decode_tokens=64, rate_rps=8.0)
+    stream = _search(stream_sc, "goodput", steps)
+    sd = {}
+    if stream.best_config:
+        with make_env("gpt3-13b", "system2", scenario=stream_sc,
+                      objective="goodput") as env:
+            sd = env.evaluate_config(stream.best_config).detail
+    rows.append(("serve_request_stream", 0.0,
+                 f"goodput_rps={stream.best_reward:.2f} "
+                 f"ttft_p99_ms={sd.get('ttft_p99_ms', 0):.1f} "
+                 f"tpot_p99_ms={sd.get('tpot_p99_ms', 0):.2f} "
+                 f"waves={sd.get('waves')} "
+                 f"points_per_s={stream.points_per_s:.0f}"))
 
     tenants = (
         Tenant("train-13b", ARCHS["gpt3-13b"], 512, 2048, "train",

@@ -31,7 +31,7 @@ from typing import Any, Sequence
 from repro.configs.base import ArchSpec
 from repro.core.cache import cache_epoch, caches_enabled
 from repro.core.compute import Device
-from repro.core.rewards import Evaluation
+from repro.core.rewards import REWARDS, STREAM_OBJECTIVES, Evaluation
 from repro.core.scenario import EnvContext, Scenario, TrainScenario
 from repro.core.simulator import SystemConfig
 from repro.core.topology import Network, build_network
@@ -111,7 +111,26 @@ class CosmicEnv:
     _in_context: bool = field(default=False, repr=False)  # inside `with env:`
 
     def __post_init__(self) -> None:
+        # fail at construction on a bad objective, not deep in a search:
+        # classic one-latency rewards (REWARDS) for every scenario, plus the
+        # streaming objectives (STREAM_OBJECTIVES, e.g. "goodput") for
+        # scenarios that resolve per-request metrics themselves
+        known = set(REWARDS) | set(STREAM_OBJECTIVES)
+        if self.objective not in known:
+            raise ValueError(f"unknown objective {self.objective!r}; "
+                             f"known: {sorted(known)}")
+        if self.objective in STREAM_OBJECTIVES and self.scenario is not None \
+                and not getattr(self.scenario, "supports_stream_objectives",
+                                False):
+            raise ValueError(
+                f"objective {self.objective!r} needs a streaming scenario "
+                f"(per-request metrics); {type(self.scenario).__name__} "
+                f"only supports {sorted(REWARDS)}")
         if self.scenario is None:
+            if self.objective in STREAM_OBJECTIVES:
+                raise ValueError(f"objective {self.objective!r} needs a "
+                                 f"streaming scenario, not the legacy "
+                                 f"batch/seq TrainScenario path")
             if self.batch is None or self.seq is None:
                 raise TypeError("CosmicEnv needs either a scenario or "
                                 "legacy batch/seq fields")

@@ -16,6 +16,8 @@ import math
 from dataclasses import dataclass
 from typing import Any, Callable
 
+import numpy as np
+
 from repro.configs.base import ArchSpec
 from repro.core.memory import footprint
 from repro.core.simulator import SimResult, SystemConfig, simulate
@@ -61,6 +63,77 @@ def slo_attainment(latency_ms: float, slo_ms: float) -> float:
     if latency_ms <= 0 or math.isinf(latency_ms):
         return 0.0
     return min(1.0, slo_ms / latency_ms)
+
+
+# ---------------------------------------------------------------------------
+# Streaming (request-stream serving) objectives
+# ---------------------------------------------------------------------------
+
+# objectives a streaming scenario resolves itself instead of through REWARDS
+# (their reward is a function of per-request metrics, not one latency)
+STREAM_OBJECTIVES = ("goodput",)
+
+
+def percentile(values: list[float], p: float) -> float:
+    """Numpy's default linear-interpolated percentile over a per-request
+    metric list; 0.0 on empty input (np.percentile raises there)."""
+    if not values:
+        return 0.0
+    return float(np.percentile(values, p))
+
+
+@dataclass(frozen=True)
+class StreamMetrics:
+    """Per-request serving metrics aggregated over one simulated request
+    stream: time-to-first-token and time-per-output-token percentiles, plus
+    goodput — requests meeting BOTH SLOs, per second of simulated horizon."""
+    n_requests: int
+    n_ok: int
+    ttft_p50_ms: float
+    ttft_p99_ms: float
+    tpot_p50_ms: float
+    tpot_p99_ms: float
+    latency_p99_ms: float       # end-to-end (arrival -> last token)
+    goodput_rps: float
+    horizon_ms: float
+
+    def detail(self) -> dict[str, float]:
+        return {
+            "n_requests": self.n_requests, "n_ok": self.n_ok,
+            "ttft_p50_ms": self.ttft_p50_ms, "ttft_p99_ms": self.ttft_p99_ms,
+            "tpot_p50_ms": self.tpot_p50_ms, "tpot_p99_ms": self.tpot_p99_ms,
+            "latency_p99_ms": self.latency_p99_ms,
+            "goodput_rps": self.goodput_rps, "horizon_ms": self.horizon_ms,
+        }
+
+
+def stream_metrics(ttft_ms: list[float], tpot_ms: list[float],
+                   latency_ms: list[float], *, ttft_slo_ms: float,
+                   tpot_slo_ms: float, horizon_ms: float) -> StreamMetrics:
+    """Aggregate per-request TTFT/TPOT/e2e-latency lists into percentiles
+    and SLO goodput.  ``horizon_ms`` is the simulated span the goodput rate
+    is normalized over (last completion or last arrival, whichever later)."""
+    n_ok = sum(1 for t, p in zip(ttft_ms, tpot_ms)
+               if t <= ttft_slo_ms and p <= tpot_slo_ms)
+    return StreamMetrics(
+        n_requests=len(ttft_ms), n_ok=n_ok,
+        ttft_p50_ms=percentile(ttft_ms, 50), ttft_p99_ms=percentile(ttft_ms, 99),
+        tpot_p50_ms=percentile(tpot_ms, 50), tpot_p99_ms=percentile(tpot_ms, 99),
+        latency_p99_ms=percentile(latency_ms, 99),
+        goodput_rps=n_ok / max(horizon_ms / 1e3, 1e-9),
+        horizon_ms=horizon_ms,
+    )
+
+
+def stream_reward(objective: str, metrics: StreamMetrics,
+                  net: Network) -> float:
+    """Resolve a streaming scenario's reward: ``goodput`` maximizes SLO-
+    meeting requests/sec; any ``REWARDS`` objective is applied to the p99
+    end-to-end request latency (so e.g. ``perf_per_cost`` still regularizes
+    by the network spend)."""
+    if objective == "goodput":
+        return metrics.goodput_rps
+    return REWARDS[objective](metrics.latency_p99_ms, net)
 
 
 def evaluate(spec: ArchSpec, par: Parallelism, cfg: SystemConfig, *,

@@ -13,34 +13,47 @@ methods:
   * ``evaluate(ctx)`` — design point -> ``Evaluation`` (reward, latency,
     validity gate), where ``ctx`` is the env-resolved ``EnvContext``.
 
-Three built-ins:
+Four built-ins:
 
-  ``TrainScenario``        one homogeneous training (or monolithic-serving)
-                           job — bit-identical to the pre-scenario engine.
-  ``DisaggServeScenario``  disaggregated serving: separate prefill and
-                           decode NPU pools sized by a searchable
-                           ``prefill_frac``, a KV-cache transfer collective
-                           between pools, and decode continuous batching
-                           with a searchable ``decode_batch``.
-  ``MultiTenantScenario``  N workloads on disjoint (possibly heterogeneous)
-                           cluster partitions whose sizes are searchable;
-                           reward is weighted SLO attainment.
+  ``TrainScenario``         one homogeneous training (or monolithic-serving)
+                            job — bit-identical to the pre-scenario engine.
+  ``DisaggServeScenario``   disaggregated serving: separate prefill and
+                            decode NPU pools sized by a searchable
+                            ``prefill_frac``, a KV-cache transfer collective
+                            between pools, and decode continuous batching
+                            with a searchable ``decode_batch``.  Multi-wave
+                            loads run as a pipelined multi-wave trace.
+  ``RequestStreamScenario`` serving driven by an arrival process (Poisson
+                            rate or a replayable inter-arrival trace):
+                            requests queue, admit under a searchable
+                            batching window / max-in-flight cap, and the
+                            admitted waves run as one pipelined multi-pool
+                            trace; rewards are streaming metrics (TTFT/TPOT
+                            percentiles, SLO goodput).
+  ``MultiTenantScenario``   N workloads on disjoint (possibly heterogeneous)
+                            cluster partitions whose sizes are searchable;
+                            reward is weighted SLO attainment.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, replace
-from typing import Any, Mapping, Protocol, runtime_checkable
+from typing import Any, ClassVar, Mapping, Protocol, runtime_checkable
+
+import numpy as np
 
 from repro.configs.base import ArchSpec
+from repro.core.cache import switchable_lru_cache
 from repro.core.compute import DEVICES, Device
 from repro.core.memory import footprint, kv_cache_bytes
 from repro.core.psa import Constraint, Parameter, ParameterSet
-from repro.core.rewards import REWARDS, Evaluation, evaluate, slo_attainment
-from repro.core.simulator import SystemConfig, simulate
+from repro.core.rewards import (REWARDS, Evaluation, evaluate, slo_attainment,
+                                stream_metrics, stream_reward)
+from repro.core.simulator import SimResult, SystemConfig, simulate
 from repro.core.topology import (Cluster, Network, partition_cluster,
-                                 sub_network)
-from repro.core.workload import (Parallelism, Trace, compose_phases,
+                                 sub_network, sub_network_indexed)
+from repro.core.workload import (Parallelism, Trace, Wave, WaveSegment,
+                                 compose_phases, compose_request_waves,
                                  generate_trace)
 
 
@@ -64,6 +77,11 @@ class EnvContext:
         return Parallelism(n_npus if n_npus is not None else self.n_npus,
                            c["dp"], c["sp"], c["pp"],
                            bool(c["weight_sharded"]))
+
+    def reward(self, latency_ms: float) -> float:
+        """The env objective applied to one end-to-end latency (scenarios
+        with richer metrics — streaming — resolve rewards themselves)."""
+        return REWARDS[self.objective](latency_ms, self.sys_cfg.network)
 
 
 @runtime_checkable
@@ -137,6 +155,85 @@ class TrainScenario:
 # DisaggServeScenario — prefill/decode disaggregation
 # ---------------------------------------------------------------------------
 
+def _decode_pool(n_dec: int, batch: int, decode_batch: int) -> tuple[Parallelism, int, int]:
+    """(decode-pool parallelism, waves, resident requests): ``replicas``
+    continuous-batching groups of up to ``decode_batch`` requests, each TP
+    over its pool share; ``waves`` serial passes drain ``batch`` requests."""
+    replicas = min(n_dec, max(1, math.ceil(batch / decode_batch)))
+    tp = n_dec // replicas
+    par = Parallelism(replicas * tp, dp=replicas, sp=1, pp=1)
+    waves = math.ceil(batch / (replicas * decode_batch))
+    # no more requests can be in flight than exist
+    resident = min(decode_batch * replicas, batch)
+    return par, waves, resident
+
+
+def _serving_wave_trace(spec: ArchSpec, par_pre: Parallelism,
+                        par_dec: Parallelism, *, seq: int, decode_tokens: int,
+                        wave_sizes: list[int], releases_ms: list[float],
+                        max_inflight: int | None,
+                        meta: dict[str, Any]) -> Trace:
+    """The pipelined multi-wave disagg trace: each wave is prefill (pool 0)
+    -> KV ``xfer`` -> first decode token -> remaining tokens (pool 1,
+    op-level ``repeat``).  Decode waves chain (the pool holds one wave's KV
+    at a time) while wave k+1's prefill overlaps wave k's decode in the
+    event loop; ``max_inflight`` (if given) additionally gates wave w's
+    prefill behind wave w-max_inflight's completion, and ``releases_ms``
+    gates each wave behind its arrival-process admission time.
+
+    Memoized on every trace-shaping input (the network/collective stacks
+    don't shape the trace), so design points differing only in those stacks
+    share one composed trace — and its piggybacked simulator plan."""
+    return _serving_wave_trace_cached(
+        spec, par_pre, par_dec, seq, decode_tokens, tuple(wave_sizes),
+        tuple(releases_ms), max_inflight,
+        str(meta.get("arch", "")), str(meta.get("scenario", "")))
+
+
+def _serving_wave_trace_impl(spec: ArchSpec, par_pre: Parallelism,
+                             par_dec: Parallelism, seq: int,
+                             decode_tokens: int, wave_sizes: tuple,
+                             releases_ms: tuple, max_inflight: int | None,
+                             arch: str, scenario: str) -> Trace:
+    meta = dict(arch=arch, scenario=scenario)
+    lanes = max(1, min(par_pre.n_npus, par_dec.n_npus))
+    last_seg = 2 if decode_tokens > 1 else 1
+    waves: list[Wave] = []
+    for w, size in enumerate(wave_sizes):
+        pre = generate_trace(spec, par_pre, batch=size, seq=seq,
+                             mode="prefill")
+        dec = generate_trace(spec, par_dec, batch=size, seq=seq,
+                             mode="decode")
+        xb = kv_cache_bytes(spec, batch=size, seq=seq) / lanes
+        segs = [WaveSegment(pre, 0, 1, xb), WaveSegment(dec, 1)]
+        if decode_tokens > 1:
+            segs.append(WaveSegment(dec, 1, decode_tokens - 1))
+        gates = []
+        if w >= 1:
+            gates.append((1, w - 1, last_seg))
+        if max_inflight is not None and w >= max_inflight:
+            gates.append((0, w - max_inflight, last_seg))
+        waves.append(Wave(tuple(segs), release_ms=releases_ms[w],
+                          gates=tuple(gates)))
+    return compose_request_waves(waves, meta=meta)
+
+
+_serving_wave_trace_cached = \
+    switchable_lru_cache(maxsize=512)(_serving_wave_trace_impl)
+
+
+def _wave_times_ms(trace: Trace, res: SimResult) -> list[tuple[float, float]]:
+    """Per wave ``(first_token_ms, last_token_ms)`` completion times, read
+    off the recorded op finish times through ``meta["wave_marks"]``."""
+    fin = res.op_finish_us
+    out = []
+    for mk in trace.meta["wave_marks"]:
+        t_first = max(fin[u] for u in mk["seg_tails"][1]) / 1e3
+        t_done = max(fin[u] for u in mk["seg_tails"][-1]) / 1e3
+        out.append((t_first, t_done))
+    return out
+
+
 def _compose_memo(pre: Trace, dec: Trace, xfer_bytes: float,
                   meta: dict[str, Any]) -> Trace:
     """compose_phases memoized by input-trace identity: phase traces are
@@ -172,12 +269,19 @@ class DisaggServeScenario:
     ``prefill_frac = 1.0`` degenerates to the monolithic serve path
     (``TrainScenario(mode="serve")``): one pool, one parallelization for
     both phases, no transfer.
+
+    ``pipelined=True`` (default) runs multi-wave loads as ONE pipelined
+    multi-wave trace (per-wave prefill/xfer/decode, wave k+1's prefill
+    overlapping wave k's decode in the event loop); ``pipelined=False``
+    keeps the older analytic composition — one full-batch prefill then
+    ``waves * decode_tokens`` serial token steps — for comparison.
     """
     batch: int
     seq: int
     decode_tokens: int = 64
     prefill_fracs: tuple = (0.25, 0.5, 0.625, 0.75, 0.875, 1.0)
     decode_batches: tuple = (4, 8, 16, 32, 64, 128)
+    pipelined: bool = True
     name: str = "disagg-serve"
 
     def psa_params(self) -> list[Parameter]:
@@ -207,16 +311,21 @@ class DisaggServeScenario:
         return n_pre, ctx.n_npus - n_pre
 
     def _decode_par(self, n_dec: int, decode_batch: int) -> tuple[Parallelism, int, int]:
-        """(decode-pool parallelism, waves, resident requests): ``replicas``
-        continuous-batching groups of up to ``decode_batch`` requests, each
-        TP over its pool share."""
-        replicas = min(n_dec, max(1, math.ceil(self.batch / decode_batch)))
-        tp = n_dec // replicas
-        par = Parallelism(replicas * tp, dp=replicas, sp=1, pp=1)
-        waves = math.ceil(self.batch / (replicas * decode_batch))
-        # no more requests can be in flight than exist
-        resident = min(decode_batch * replicas, self.batch)
-        return par, waves, resident
+        return _decode_pool(n_dec, self.batch, decode_batch)
+
+    def _wave_sizes(self, waves: int, resident: int) -> list[int]:
+        """Per-wave request counts: full ``resident`` waves + the tail."""
+        return [resident] * (waves - 1) + [self.batch - resident * (waves - 1)]
+
+    def _pipelined_trace(self, ctx: EnvContext, par_pre: Parallelism,
+                         par_dec: Parallelism, waves: int,
+                         resident: int) -> Trace:
+        return _serving_wave_trace(
+            ctx.spec, par_pre, par_dec, seq=self.seq,
+            decode_tokens=self.decode_tokens,
+            wave_sizes=self._wave_sizes(waves, resident),
+            releases_ms=[0.0] * waves, max_inflight=None,
+            meta=dict(arch=ctx.spec.name, scenario=self.name))
 
     def _phase_traces(self, ctx: EnvContext, par_pre: Parallelism,
                       par_dec: Parallelism, resident: int) -> tuple[Trace, Trace, Trace]:
@@ -239,10 +348,20 @@ class DisaggServeScenario:
             raise ValueError(f"degenerate pool split {n_pre}/{n_dec} for "
                              f"prefill_frac={ctx.config['prefill_frac']} on "
                              f"{ctx.n_npus} NPUs")
-        par_dec, _, resident = self._decode_par(n_dec,
-                                                int(ctx.config["decode_batch"]))
-        pre, dec, combined = self._phase_traces(ctx, ctx.parallelism(n_pre),
-                                                par_dec, resident)
+        par_pre = ctx.parallelism(n_pre)
+        par_dec, waves, resident = self._decode_par(
+            n_dec, int(ctx.config["decode_batch"]))
+        if self.pipelined:
+            sizes = self._wave_sizes(waves, resident)
+            pre = generate_trace(ctx.spec, par_pre, batch=sizes[0],
+                                 seq=self.seq, mode="prefill")
+            dec = generate_trace(ctx.spec, par_dec, batch=sizes[0],
+                                 seq=self.seq, mode="decode")
+            combined = self._pipelined_trace(ctx, par_pre, par_dec, waves,
+                                             resident)
+            return {"prefill": pre, "decode": dec, "combined": combined}
+        pre, dec, combined = self._phase_traces(ctx, par_pre, par_dec,
+                                                resident)
         return {"prefill": pre, "decode": dec, "combined": combined}
 
     def _xfer_bytes(self, ctx: EnvContext, n_pre: int, n_dec: int) -> float:
@@ -280,28 +399,253 @@ class DisaggServeScenario:
             return _invalid(f"decode memory {fp_dec.total_gb:.1f}GB "
                             f"> {ctx.capacity_gb}GB")
 
-        _, dec_tr, combined = self._phase_traces(ctx, par_pre, par_dec,
-                                                 resident)
         # each pool's collectives are priced on the sub-fabric its NPU
         # slice spans, not the whole cluster (same carving rule as
-        # MultiTenantScenario partitions)
-        pre_pool = (par_pre, sub_network(ctx.network, par_pre.n_npus))
-        dec_pool = (par_dec, sub_network(ctx.network, par_dec.n_npus))
-        first = simulate(combined, ctx.sys_cfg, par_pre,
-                         pools={0: pre_pool, 1: dec_pool})
-        step = simulate(dec_tr, ctx.sys_cfg, par_dec,
-                        pools={0: dec_pool})
-        t_token_ms = step.latency_ms
-        latency_ms = first.latency_ms \
-            + (self.decode_tokens * waves - 1) * t_token_ms
-        r = REWARDS[ctx.objective](latency_ms, ctx.sys_cfg.network)
-        return Evaluation(r, latency_ms, True, {
+        # MultiTenantScenario partitions), with each sub-dim's algorithm
+        # resolved against its SOURCE physical dim
+        pre_pool = (par_pre, *sub_network_indexed(ctx.network, par_pre.n_npus))
+        dec_pool = (par_dec, *sub_network_indexed(ctx.network, par_dec.n_npus))
+        detail = {
             "scenario": self.name, "prefill_npus": n_pre,
             "decode_npus": par_dec.n_npus, "decode_tp": par_dec.tp,
             "decode_replicas": par_dec.dp, "decode_batch": decode_batch,
-            "waves": waves, "ttft_ms": first.latency_ms - t_token_ms,
-            "p50_token_latency_ms": t_token_ms,
+            "waves": waves, "pipelined": self.pipelined,
             "prefill_gb": fp_pre.total_gb, "decode_gb": fp_dec.total_gb,
+        }
+        if self.pipelined:
+            tr = self._pipelined_trace(ctx, par_pre, par_dec, waves, resident)
+            res = simulate(tr, ctx.sys_cfg, par_pre,
+                           pools={0: pre_pool, 1: dec_pool},
+                           record_finish=True)
+            t_first, t_done = _wave_times_ms(tr, res)[0]
+            latency_ms = res.latency_ms
+            detail.update(
+                ttft_ms=t_first,
+                p50_token_latency_ms=(t_done - t_first)
+                / max(self.decode_tokens - 1, 1))
+        else:
+            _, dec_tr, combined = self._phase_traces(ctx, par_pre, par_dec,
+                                                     resident)
+            first = simulate(combined, ctx.sys_cfg, par_pre,
+                             pools={0: pre_pool, 1: dec_pool})
+            step = simulate(dec_tr, ctx.sys_cfg, par_dec,
+                            pools={0: dec_pool})
+            t_token_ms = step.latency_ms
+            latency_ms = first.latency_ms \
+                + (self.decode_tokens * waves - 1) * t_token_ms
+            detail.update(ttft_ms=first.latency_ms - t_token_ms,
+                          p50_token_latency_ms=t_token_ms)
+        return Evaluation(ctx.reward(latency_ms), latency_ms, True, detail)
+
+
+# ---------------------------------------------------------------------------
+# RequestStreamScenario — arrival-process serving with queueing
+# ---------------------------------------------------------------------------
+
+def _arrivals_impl(gaps_ms: tuple, n_requests: int, rate_rps: float,
+                   seed: int) -> tuple[float, ...]:
+    if gaps_ms:
+        gaps = [float(gaps_ms[i % len(gaps_ms)]) for i in range(n_requests)]
+    else:
+        rng = np.random.default_rng(seed)
+        gaps = rng.exponential(1000.0 / rate_rps, n_requests).tolist()
+    t, out = 0.0, []
+    for g in gaps:
+        t += g
+        out.append(t)
+    return tuple(out)
+
+
+_arrivals_cached = switchable_lru_cache(maxsize=64)(_arrivals_impl)
+
+
+@dataclass(frozen=True)
+class RequestStreamScenario:
+    """Serving a request STREAM instead of one analytic batch: requests
+    arrive by a Poisson process (``rate_rps``) or a replayable inter-arrival
+    trace (``arrival_gaps_ms``, cycled over ``n_requests``), queue, and are
+    admitted in waves under a searchable batching window; admitted waves run
+    through disaggregated prefill/decode pools as ONE pipelined multi-wave
+    trace (per-wave prefill -> KV ``xfer`` -> decode, wave k+1's prefill
+    overlapping wave k's decode on separate pool resources, with release
+    delays carrying the arrival times into the event loop).
+
+    Searchable scenario knobs (alongside the workload/collective/network
+    stacks):
+
+      ``batch_window_ms``  how long an open wave waits for more requests —
+                           trades queueing delay (TTFT) against batching
+                           efficiency; a wave also closes when it reaches
+                           ``max_batch`` requests.
+      ``max_inflight``     admission cap: wave w's prefill is gated behind
+                           wave w-max_inflight's completion.
+      ``prefill_frac``     prefill/decode pool split (as DisaggServe).
+      ``decode_batch``     continuous-batching replica size (as DisaggServe).
+
+    Rewards are streaming metrics: ``objective="goodput"`` maximizes
+    requests meeting BOTH SLOs per second; any classic objective applies to
+    the p99 end-to-end request latency.  TTFT/TPOT p50/p99 are always in
+    ``Evaluation.detail``."""
+    # class marker: this scenario resolves STREAM_OBJECTIVES ("goodput")
+    # itself — CosmicEnv rejects those objectives for scenarios without it
+    supports_stream_objectives: ClassVar[bool] = True
+
+    n_requests: int = 64
+    seq: int = 2048
+    decode_tokens: int = 64
+    rate_rps: float = 8.0
+    arrival_gaps_ms: tuple = ()      # replayable inter-arrival gaps (ms)
+    seed: int = 0
+    max_batch: int = 32              # hard cap on requests per wave
+    ttft_slo_ms: float = 4000.0
+    tpot_slo_ms: float = 200.0
+    batch_windows_ms: tuple = (0.0, 50.0, 200.0, 500.0, 1000.0)
+    max_inflights: tuple = (1, 2, 4, 8)
+    prefill_fracs: tuple = (0.25, 0.5, 0.625, 0.75, 0.875)
+    decode_batches: tuple = (4, 8, 16, 32)
+    name: str = "request-stream"
+
+    def psa_params(self) -> list[Parameter]:
+        return [
+            Parameter("batch_window_ms", "scenario", self.batch_windows_ms,
+                      doc="max wait for an open admission wave to fill"),
+            Parameter("max_inflight", "scenario", self.max_inflights,
+                      doc="admission cap on waves in flight"),
+            Parameter("prefill_frac", "scenario", self.prefill_fracs,
+                      doc="fraction of the cluster in the prefill pool"),
+            Parameter("decode_batch", "scenario", self.decode_batches,
+                      doc="requests continuously batched per decode replica"),
+        ]
+
+    def psa_constraints(self, n_npus: int) -> list[Constraint]:
+        return []
+
+    # -- arrival process ---------------------------------------------------
+    def arrivals_ms(self) -> tuple[float, ...]:
+        """Request arrival times: deterministic given the scenario fields
+        (replayed gaps, or seeded exponential gaps for a Poisson process).
+        Memoized — arrivals are identical for every design point of a
+        search, so the hot path shouldn't redraw them per evaluation."""
+        return _arrivals_cached(self.arrival_gaps_ms, self.n_requests,
+                                self.rate_rps, self.seed)
+
+    def form_waves(self, window_ms: float,
+                   max_batch: int | None = None) -> list[tuple[list[int], float]]:
+        """Queueing/admission: group arrivals into waves of request indices.
+        A wave opens at its first request, releases at ``open + window_ms``
+        or the instant it fills to the admission cap; each ``(indices,
+        release_ms)`` becomes one wave of the pipelined trace.
+
+        ``max_batch`` overrides the scenario cap — ``evaluate`` passes the
+        decode pool's resident capacity (``replicas * decode_batch``, itself
+        capped by the scenario ``max_batch``) so an admitted wave never
+        exceeds what the decode pool can actually hold."""
+        cap = self.max_batch if max_batch is None else max(1, max_batch)
+        arrivals = self.arrivals_ms()
+        waves: list[tuple[list[int], float]] = []
+        cur: list[int] = []
+        deadline = 0.0
+        for i, t in enumerate(arrivals):
+            if cur and t > deadline:
+                waves.append((cur, deadline))
+                cur = []
+            cur.append(i)
+            if len(cur) == 1:
+                deadline = t + window_ms
+            if len(cur) == cap:
+                waves.append((cur, t))
+                cur = []
+        if cur:
+            waves.append((cur, deadline))
+        return waves
+
+    # -- pools (same carving as DisaggServeScenario) -----------------------
+    def _pools(self, ctx: EnvContext) -> tuple[int, int]:
+        frac = float(ctx.config["prefill_frac"])
+        n_pre = int(round(frac * ctx.n_npus))
+        return n_pre, ctx.n_npus - n_pre
+
+    def _stream_trace(self, ctx: EnvContext, par_pre: Parallelism,
+                      par_dec: Parallelism,
+                      waves: list[tuple[list[int], float]]) -> Trace:
+        return _serving_wave_trace(
+            ctx.spec, par_pre, par_dec, seq=self.seq,
+            decode_tokens=self.decode_tokens,
+            wave_sizes=[len(idxs) for idxs, _ in waves],
+            releases_ms=[rel for _, rel in waves],
+            max_inflight=int(ctx.config["max_inflight"]),
+            meta=dict(arch=ctx.spec.name, scenario=self.name))
+
+    def _resolved(self, ctx: EnvContext):
+        n_pre, n_dec = self._pools(ctx)
+        if n_pre < 1 or n_dec < 1:
+            raise ValueError(f"degenerate pool split {n_pre}/{n_dec}")
+        par_pre = ctx.parallelism(n_pre)
+        par_dec, _, resident = _decode_pool(n_dec, self.max_batch,
+                                            int(ctx.config["decode_batch"]))
+        return par_pre, par_dec, resident
+
+    def traces(self, ctx: EnvContext) -> dict[str, Trace]:
+        par_pre, par_dec, resident = self._resolved(ctx)
+        waves = self.form_waves(float(ctx.config["batch_window_ms"]),
+                                max_batch=resident)
+        return {"stream": self._stream_trace(ctx, par_pre, par_dec, waves)}
+
+    def evaluate(self, ctx: EnvContext) -> Evaluation:
+        try:
+            par_pre, par_dec, resident = self._resolved(ctx)
+        except ValueError as e:
+            return _invalid(str(e))
+        if not par_pre.valid():
+            return _invalid(f"prefill parallelization invalid on "
+                            f"{par_pre.n_npus} NPUs")
+        fp_pre = footprint(ctx.spec, par_pre, batch=self.max_batch,
+                           seq=self.seq, mode="inference")
+        if fp_pre.total_gb > ctx.capacity_gb:
+            return _invalid(f"prefill memory {fp_pre.total_gb:.1f}GB "
+                            f"> {ctx.capacity_gb}GB")
+        fp_dec = footprint(ctx.spec, par_dec, batch=resident, seq=self.seq,
+                           mode="decode")
+        if fp_dec.total_gb > ctx.capacity_gb:
+            return _invalid(f"decode memory {fp_dec.total_gb:.1f}GB "
+                            f"> {ctx.capacity_gb}GB")
+
+        waves = self.form_waves(float(ctx.config["batch_window_ms"]),
+                                max_batch=resident)
+        tr = self._stream_trace(ctx, par_pre, par_dec, waves)
+        pre_pool = (par_pre, *sub_network_indexed(ctx.network, par_pre.n_npus))
+        dec_pool = (par_dec, *sub_network_indexed(ctx.network, par_dec.n_npus))
+        res = simulate(tr, ctx.sys_cfg, par_pre,
+                       pools={0: pre_pool, 1: dec_pool}, record_finish=True)
+
+        arrivals = self.arrivals_ms()
+        ttfts: list[float] = []
+        tpots: list[float] = []
+        lats: list[float] = []
+        for (idxs, _), (t_first, t_done) in zip(waves,
+                                                _wave_times_ms(tr, res)):
+            tpot = (t_done - t_first) / max(self.decode_tokens - 1, 1)
+            for i in idxs:
+                ttfts.append(t_first - arrivals[i])
+                tpots.append(tpot)
+                lats.append(t_done - arrivals[i])
+        horizon_ms = max(res.latency_ms, arrivals[-1])
+        m = stream_metrics(ttfts, tpots, lats, ttft_slo_ms=self.ttft_slo_ms,
+                           tpot_slo_ms=self.tpot_slo_ms,
+                           horizon_ms=horizon_ms)
+        r = stream_reward(ctx.objective, m, ctx.sys_cfg.network)
+        return Evaluation(r, m.latency_p99_ms, True, {
+            "scenario": self.name, "prefill_npus": par_pre.n_npus,
+            "decode_npus": par_dec.n_npus, "decode_tp": par_dec.tp,
+            "decode_replicas": par_dec.dp,
+            "decode_batch": int(ctx.config["decode_batch"]),
+            "batch_window_ms": float(ctx.config["batch_window_ms"]),
+            "max_inflight": int(ctx.config["max_inflight"]),
+            "waves": len(waves),
+            "wave_sizes": [len(idxs) for idxs, _ in waves],
+            "makespan_ms": res.latency_ms,
+            "prefill_gb": fp_pre.total_gb, "decode_gb": fp_dec.total_gb,
+            **m.detail(),
         })
 
 

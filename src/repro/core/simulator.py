@@ -45,18 +45,22 @@ class SystemConfig:
     xfer_latency_us: float = 5.0
 
 
-def group_dims(net: Network, par: Parallelism) -> dict[str, list[TopoDim]]:
+def group_dims(net: Network, par: Parallelism) -> dict[str, list[tuple[int, TopoDim]]]:
     """Map parallelism groups onto network dimensions, innermost first:
     TP gets the inner (fastest) dims, then EP(=TP group), SP, DP, PP.
 
-    When a group covers part of a dim, a virtual TopoDim with the residual
-    group size (same kind/bw) approximates the sub-ring/sub-switch.  A group
-    factor sharing no divisor with any dim (non-power-of-two pools from
-    disaggregated/partitioned scenarios) becomes a virtual dim at the
-    outermost — slowest — tier so its collectives are never free."""
+    Each carved dim is returned with the physical dim index it came from
+    (``carve_dims`` contract), so DP/PP collectives riding outer dims are
+    priced with the collective algorithms the agent configured for THOSE
+    dims — not the inner dims' algorithms.  When a group covers part of a
+    dim, a virtual TopoDim with the residual group size (same kind/bw)
+    approximates the sub-ring/sub-switch.  A group factor sharing no
+    divisor with any dim (non-power-of-two pools from disaggregated/
+    partitioned scenarios) becomes a virtual dim at the outermost —
+    slowest — tier so its collectives are never free."""
     sizes = {"tp": par.tp, "sp": par.sp, "dp": par.dp, "pp": par.pp}
     cap = [d.npus for d in net.dims]  # consumed across groups, in order
-    out: dict[str, list[TopoDim]] = {
+    out: dict[str, list[tuple[int, TopoDim]]] = {
         grp: carve_dims(net.dims, cap, sizes[grp])
         for grp in ("tp", "sp", "dp", "pp")
     }
@@ -72,20 +76,32 @@ class SimResult:
     exposed_comm_us: float
     per_op_us: dict[int, float] = field(default_factory=dict)
     pool_compute_us: dict[int, float] = field(default_factory=dict)
+    # op completion times (same opt-in as per_op_us): the request-stream
+    # scenario reads per-wave first-token / last-token finish times off this
+    op_finish_us: dict[int, float] = field(default_factory=dict)
 
     @property
     def latency_ms(self) -> float:
         return self.makespan_us / 1e3
 
 
-def _group_net(cfg: SystemConfig, dims: list[TopoDim]) -> tuple[Network, tuple[str, ...]] | None:
-    """Resolve one parallelism group's sub-network + per-dim algorithms."""
-    if not dims:
+def _group_net(cfg: SystemConfig,
+               carved: list[tuple[int, TopoDim]]) -> tuple[Network, tuple[str, ...]] | None:
+    """Resolve one parallelism group's sub-network + per-dim algorithms.
+
+    ``carved`` pairs each dim with its source physical dim index, so the
+    group's collectives use ``cfg.coll_algo[src_idx]`` — the algorithm the
+    agent chose for that physical dim — instead of slicing from position 0
+    (which handed DP/PP groups the inner dims' algorithms).  Residual
+    virtual dims carry the outermost dim's index and therefore inherit its
+    algorithm; indices beyond the configured tuple clamp to its last entry.
+    """
+    if not carved:
         return None
-    algos = list(cfg.coll_algo[: len(dims)])
-    if len(algos) < len(dims):
-        algos += [algos[-1] if algos else "ring"] * (len(dims) - len(algos))
-    return Network(tuple(dims)), tuple(algos)
+    n_alg = len(cfg.coll_algo)
+    algos = tuple(cfg.coll_algo[min(i, n_alg - 1)] if n_alg else "ring"
+                  for i, _ in carved)
+    return Network(tuple(d for _, d in carved)), algos
 
 
 @dataclass
@@ -96,7 +112,8 @@ class _SimPlan:
     lives in flat lists instead of dicts.  Resources are small integer ids;
     id 0 is always pool 0's compute stream.  Every pool gets its own compute
     stream and comm engines; cross-partition ``xfer`` collectives share one
-    transfer resource."""
+    transfer resource; ``delay`` ops (arrival releases in request-stream
+    traces) each get a private timer resource so they never serialize."""
     n_ops: int
     res_names: list[str]                # per resource id: "compute" | group
     res_pool: list[int]                 # per resource id: owning pool
@@ -107,7 +124,8 @@ class _SimPlan:
     comp_uids: np.ndarray
     comp_flops: np.ndarray
     comp_bytes: np.ndarray
-    coll_ops: list[tuple[int, str, float, str, int]]  # (uid, coll, size, group, pool)
+    coll_ops: list[tuple[int, str, float, str, int, int]]  # (uid, coll, size, group, pool, repeat)
+    delay_ops: list[tuple[int, float]]  # (uid, delay_us)
     pools: tuple[int, ...]
 
 
@@ -129,7 +147,8 @@ def _sim_plan(trace: Trace) -> _SimPlan:
     comp_idx: list[int] = []
     comp_flops: list[float] = []
     comp_bytes: list[float] = []
-    coll_ops: list[tuple[int, str, float, str, int]] = []
+    coll_ops: list[tuple[int, str, float, str, int, int]] = []
+    delay_ops: list[tuple[int, float]] = []
     pools: set[int] = {0}
 
     def resource(pool: int, name: str) -> int:
@@ -146,13 +165,21 @@ def _sim_plan(trace: Trace) -> _SimPlan:
         if op.kind == "comp":
             res_of[op.uid] = resource(op.pool, "compute")
             comp_idx.append(op.uid)
-            comp_flops.append(op.flops)
-            comp_bytes.append(op.bytes)
+            # the roofline is linear in (flops, bytes), so an op repeated
+            # back-to-back k times is exactly one op scaled by k
+            comp_flops.append(op.flops * op.repeat)
+            comp_bytes.append(op.bytes * op.repeat)
+        elif op.kind == "delay":
+            # a pure time offset (request release): private resource so
+            # concurrent delays never queue on each other
+            res_of[op.uid] = resource(op.pool, f"_delay{op.uid}")
+            delay_ops.append((op.uid, op.delay_us))
         else:
             # the transfer engine bridges partitions: one shared resource
             pool = 0 if op.group == "xfer" else op.pool
             res_of[op.uid] = resource(pool, op.group)
-            coll_ops.append((op.uid, op.coll, op.size_bytes, op.group, op.pool))
+            coll_ops.append((op.uid, op.coll, op.size_bytes, op.group,
+                             op.pool, op.repeat))
         ndeps0[op.uid] = len(op.deps)
         if not op.deps:
             roots.append(op.uid)
@@ -164,7 +191,8 @@ def _sim_plan(trace: Trace) -> _SimPlan:
                     comp_uids=np.array(comp_idx, dtype=np.intp),
                     comp_flops=np.array(comp_flops, dtype=np.float64),
                     comp_bytes=np.array(comp_bytes, dtype=np.float64),
-                    coll_ops=coll_ops, pools=tuple(sorted(pools)))
+                    coll_ops=coll_ops, delay_ops=delay_ops,
+                    pools=tuple(sorted(pools)))
     trace._sim_plan = plan  # traces are cached + immutable; piggyback the plan
     return plan
 
@@ -177,20 +205,21 @@ def _xfer_time_us(cfg: SystemConfig, size_bytes: float) -> float:
 
 
 def _op_durations(plan: _SimPlan, cfg: SystemConfig,
-                  gdims_by_pool: dict[int, dict[str, list[TopoDim]]]) -> list[float]:
+                  gdims_by_pool: dict[int, dict[str, list[tuple[int, TopoDim]]]]) -> list[float]:
     """Duration of every op: vectorized roofline for the compute ops, the
-    memoized collective model for the comm ops."""
+    memoized collective model for the comm ops (a repeat of k back-to-back
+    identical collectives pays k full latency+bandwidth terms)."""
     arr = np.zeros(plan.n_ops, dtype=np.float64)
     if len(plan.comp_uids):
         arr[plan.comp_uids] = cfg.device.op_times_us(plan.comp_flops,
                                                      plan.comp_bytes)
     dur = arr.tolist()
-    group_nets = {(pool, g): _group_net(cfg, dims)
+    group_nets = {(pool, g): _group_net(cfg, carved)
                   for pool, gdims in gdims_by_pool.items()
-                  for g, dims in gdims.items()}
+                  for g, carved in gdims.items()}
     chunks, mode = cfg.chunks, cfg.multidim_coll
     local: dict[tuple[int, str, str, float], float] = {}  # layers repeat shapes
-    for uid, coll, size, group, pool in plan.coll_ops:
+    for uid, coll, size, group, pool, repeat in plan.coll_ops:
         key = (pool, group, coll, size)
         t = local.get(key)
         if t is None:
@@ -205,29 +234,53 @@ def _op_durations(plan: _SimPlan, cfg: SystemConfig,
                     t = multidim_collective_time_us(coll, size, sub, algos,
                                                     chunks=chunks, mode=mode)
             local[key] = t
-        dur[uid] = t
+        dur[uid] = t * repeat
+    for uid, delay_us in plan.delay_ops:
+        dur[uid] = delay_us
     return dur
 
 
 def simulate(trace: Trace, cfg: SystemConfig, par: Parallelism, *,
              pools: dict[int, Parallelism | tuple[Parallelism, Network]] | None = None,
-             record_per_op: bool = False) -> SimResult:
+             record_per_op: bool = False,
+             record_finish: bool = False) -> SimResult:
     """Schedule ``trace`` on the device + network of ``cfg``.
 
     ``pools`` maps pool id -> that partition's Parallelism for multi-pool
     traces (default: every op belongs to pool 0, parallelized by ``par``).
     A ``(Parallelism, Network)`` value prices the pool's collectives on the
-    sub-fabric its NPU slice actually spans instead of the whole cluster.
-    ``record_per_op`` opts into materializing ``SimResult.per_op_us`` — off
-    by default because the batched DSE hot path never reads it."""
+    sub-fabric its NPU slice actually spans instead of the whole cluster; a
+    ``(Parallelism, Network, dim_map)`` value (``topology.
+    sub_network_indexed``) additionally maps each sub-fabric dim back to its
+    source physical dim so ``cfg.coll_algo`` is resolved against the dims
+    the pool's traffic actually rides.
+    ``record_per_op`` opts into materializing ``SimResult.per_op_us`` (plus
+    ``op_finish_us``); ``record_finish`` materializes only
+    ``SimResult.op_finish_us`` — the cheaper flag streaming scenarios use
+    per design point to read wave TTFT/TPOT without allocating the per-op
+    duration dict.  Both are off on the batched DSE hot path."""
     plan = _sim_plan(trace)
     if pools is None:
         pools = {p: par for p in plan.pools}
     gdims_by_pool = {}
     for p in plan.pools:
         entry = pools.get(p, par)
-        par_p, net_p = entry if isinstance(entry, tuple) else (entry, cfg.network)
-        gdims_by_pool[p] = group_dims(net_p, par_p)
+        dim_map: tuple[int, ...] | None = None
+        if isinstance(entry, tuple):
+            if len(entry) == 3:
+                par_p, net_p, dim_map = entry
+            else:
+                par_p, net_p = entry
+        else:
+            par_p, net_p = entry, cfg.network
+        gd = group_dims(net_p, par_p)
+        if dim_map:
+            # carve indices are relative to the pool's sub-fabric; translate
+            # them to the parent fabric's physical dims for algo resolution
+            last = len(dim_map) - 1
+            gd = {g: [(dim_map[min(i, last)], d) for i, d in v]
+                  for g, v in gd.items()}
+        gdims_by_pool[p] = gd
     dur = _op_durations(plan, cfg, gdims_by_pool)
 
     n_res = len(plan.res_names)
@@ -244,6 +297,8 @@ def simulate(trace: Trace, cfg: SystemConfig, par: Parallelism, *,
     events: list[tuple[float, int, int]] = []  # (time, eseq, uid)
     eseq = 0
     n_finished = 0
+    finish: dict[int, float] = {}
+    track_finish = record_per_op or record_finish
 
     for uid in plan.roots:
         seq += 1
@@ -261,6 +316,8 @@ def simulate(trace: Trace, cfg: SystemConfig, par: Parallelism, *,
     while events:
         now, _, uid = hpop(events)
         n_finished += 1
+        if track_finish:
+            finish[uid] = now
         if now > makespan:
             makespan = now
         # only the freed resource and resources receiving new work can start
@@ -292,8 +349,8 @@ def simulate(trace: Trace, cfg: SystemConfig, par: Parallelism, *,
     comm_busy: dict[str, float] = {}
     for r in range(n_res):
         name = plan.res_names[r]
-        if name == "compute":
-            continue
+        if name == "compute" or name.startswith("_delay"):
+            continue  # delay timers are releases, not communication
         key = name if plan.res_pool[r] == 0 else f"{name}@p{plan.res_pool[r]}"
         comm_busy[key] = comm_busy.get(key, 0.0) + busy[r]
     return SimResult(
@@ -306,4 +363,5 @@ def simulate(trace: Trace, cfg: SystemConfig, par: Parallelism, *,
         exposed_comm_us=max(0.0, makespan - sum(pool_compute.values())),
         per_op_us=dict(enumerate(dur)) if record_per_op else {},
         pool_compute_us=pool_compute,
+        op_finish_us=finish,
     )

@@ -80,7 +80,6 @@ class Network:
 
     def dollar_cost(self) -> float:
         total = 0.0
-        groups = 1
         n = self.n_npus
         for i, d in enumerate(self.dims):
             tier = self._LINK_COST_PER_GBPS[min(i, len(self._LINK_COST_PER_GBPS) - 1)]
@@ -110,14 +109,18 @@ def build_network(topology: Sequence[str], npus_per_dim: Sequence[int],
 
 
 def carve_dims(dims: Sequence[TopoDim], caps: list[int],
-               need: int) -> list[TopoDim]:
+               need: int) -> list[tuple[int, TopoDim]]:
     """THE carving rule: gcd-take ``need`` NPUs from ``dims`` innermost
     first, consuming the (mutated) per-dim capacities ``caps``; a residual
     factor no dim covers becomes a virtual dim at the outermost — slowest —
-    tier's speed so its traffic is never free.  Shared by ``sub_network``
-    (partition fabrics) and ``simulator.group_dims`` (parallelism-group
-    mapping) so the two can't diverge."""
-    out: list[TopoDim] = []
+    tier's speed so its traffic is never free.  Each carved dim is returned
+    as ``(source_dim_index, TopoDim)`` so callers can resolve per-physical-
+    dim configuration (e.g. the Collective stack's per-dim algorithm knob)
+    against the dim the traffic actually rides; residual virtual dims carry
+    the outermost dim's index.  Shared by ``sub_network`` (partition
+    fabrics) and ``simulator.group_dims`` (parallelism-group mapping) so
+    the two can't diverge."""
+    out: list[tuple[int, TopoDim]] = []
     for i, d in enumerate(dims):
         if need <= 1:
             break
@@ -126,12 +129,13 @@ def carve_dims(dims: Sequence[TopoDim], caps: list[int],
         take = math.gcd(need, caps[i])
         if take <= 1:
             continue
-        out.append(TopoDim(d.kind, take, d.bw, d.latency_us))
+        out.append((i, TopoDim(d.kind, take, d.bw, d.latency_us)))
         caps[i] //= take
         need //= take
     if need > 1 and dims:
         last = dims[-1]
-        out.append(TopoDim(last.kind, need, last.bw, last.latency_us))
+        out.append((len(dims) - 1, TopoDim(last.kind, need, last.bw,
+                                           last.latency_us)))
     return out
 
 
@@ -139,7 +143,17 @@ def sub_network(net: Network, n: int) -> Network:
     """The sub-fabric a contiguous group of ``n`` NPUs spans (see
     ``carve_dims``), so a partition's collectives see the link tiers its
     NPUs would actually occupy."""
-    return Network(tuple(carve_dims(net.dims, [d.npus for d in net.dims], n)))
+    return sub_network_indexed(net, n)[0]
+
+
+def sub_network_indexed(net: Network, n: int) -> tuple[Network, tuple[int, ...]]:
+    """``sub_network`` plus each sub-dim's source physical dim index, so
+    multi-pool simulations can resolve per-physical-dim configuration (the
+    Collective stack's per-dim algorithms) against the parent fabric's dims
+    instead of the sub-fabric's positions."""
+    carved = carve_dims(net.dims, [d.npus for d in net.dims], n)
+    return (Network(tuple(d for _, d in carved)),
+            tuple(i for i, _ in carved))
 
 
 @dataclass(frozen=True)

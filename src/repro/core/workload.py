@@ -24,7 +24,7 @@ from repro.core.cache import switchable_lru_cache
 class Op:
     uid: int
     name: str
-    kind: Literal["comp", "coll"]
+    kind: Literal["comp", "coll", "delay"]
     deps: list[int]
     # comp
     flops: float = 0.0
@@ -36,6 +36,12 @@ class Op:
     # which partition's resources this op occupies (multi-pool scenarios:
     # disaggregated prefill/decode pools get their own compute streams)
     pool: int = 0
+    # back-to-back executions of this op (condensed decode-token chains:
+    # k repeats occupy the resource for k x the single duration)
+    repeat: int = 1
+    # kind == "delay": a pure time offset on a private timer resource
+    # (request-stream arrival releases); never serializes with real work
+    delay_us: float = 0.0
 
 
 # Scenario phases a trace can describe.  The legacy mode strings remain
@@ -243,7 +249,10 @@ def _generate_trace_impl(spec: ArchSpec, par: Parallelism, batch: int,
     eff_mixer = _eff(mixer_width)
     eff_ffn = _eff(ffn_width)
     layers = spec.layer_defs()
-    stage_layers = layers[: max(1, len(layers) // par.pp)]
+    # one PP stage's layer slice: ceil division models the LARGEST stage, so
+    # a non-divisible layers % pp never silently drops remainder layers from
+    # the modeled compute (e.g. 34 layers @ pp=4 is a 9-layer stage, not 8)
+    stage_layers = layers[: max(1, math.ceil(len(layers) / par.pp))]
     mb = microbatches or (2 * par.pp if par.pp > 1 else 1)
     bubble = 1.0 + (par.pp - 1) / mb if par.pp > 1 else 1.0
 
@@ -321,6 +330,103 @@ def _generate_trace_impl(spec: ArchSpec, par: Parallelism, batch: int,
 _generate_trace_cached = switchable_lru_cache(maxsize=4096)(_generate_trace_impl)
 
 
+@dataclass(frozen=True)
+class WaveSegment:
+    """One phase of one wave: a (cached, immutable) phase trace placed on a
+    pool.  ``repeat`` multiplies every op's back-to-back execution count —
+    how a ``decode_tokens``-long token chain is condensed into the one-token
+    decode trace without op blow-up.  ``transfer_bytes`` inserts a
+    cross-partition ``xfer`` collective between this segment and the next
+    (the KV-cache handoff from a prefill pool to a decode pool)."""
+    trace: Trace
+    pool: int
+    repeat: int = 1
+    transfer_bytes: float = 0.0
+
+
+@dataclass(frozen=True)
+class Wave:
+    """One admitted request batch moving through its phase segments.
+
+    ``release_ms`` gates the wave's first segment behind a delay op (the
+    arrival-process admission time).  ``gates`` adds cross-wave dependency
+    edges ``(seg_idx, earlier_wave_idx, earlier_seg_idx)`` — e.g. decode
+    continuous-batching capacity (wave w's decode waits for wave w-1's) or
+    a max-in-flight admission window (wave w's prefill waits for wave
+    w-k's completion)."""
+    segments: tuple[WaveSegment, ...]
+    release_ms: float = 0.0
+    gates: tuple[tuple[int, int, int], ...] = ()
+
+
+def compose_request_waves(waves: list[Wave],
+                          meta: dict[str, Any] | None = None) -> Trace:
+    """Stitch K overlapping waves into one pipelined multi-pool trace.
+
+    Within a wave, segment i+1's roots depend on segment i's tails (with an
+    optional ``xfer`` collective on the boundary).  Across waves there are
+    no implicit dependencies — same-pool phases of different waves contend
+    for that pool's resources in the event loop (wave k+1's prefill overlaps
+    wave k's decode), which is exactly the pipelining the analytic
+    composition can't see.  Release times and explicit ``gates`` add the
+    arrival-process and capacity edges.
+
+    ``meta["wave_marks"]`` maps each wave to its op uids: ``release_uid``,
+    per-segment ``seg_tails`` lists, and ``xfer_uids`` — scenarios read
+    per-wave TTFT/TPOT off ``SimResult.op_finish_us`` through these.
+    Input traces are not mutated (they may be cache-interned)."""
+    ops: list[Op] = []
+    marks: list[dict[str, Any]] = []
+    multi = len(waves) > 1
+    for wi, wave in enumerate(waves):
+        prefix = f"w{wi}." if multi else ""
+        gate_tails: dict[int, list[int]] = {}
+        for seg_idx, gw, gs in wave.gates:
+            gate_tails.setdefault(seg_idx, []).extend(
+                marks[gw]["seg_tails"][gs])
+        release_uid = None
+        prev_tails: list[int] = []
+        if wave.release_ms > 0:
+            uid = len(ops)
+            ops.append(Op(uid, f"{prefix}release", "delay", [],
+                          pool=wave.segments[0].pool,
+                          delay_us=wave.release_ms * 1e3))
+            release_uid = uid
+            prev_tails = [uid]
+        seg_tails: list[list[int]] = []
+        xfer_uids: list[int | None] = []
+        for si, seg in enumerate(wave.segments):
+            root_deps = prev_tails + gate_tails.get(si, [])
+            off = len(ops)
+            tr = seg.trace
+            has_children = {d for op in tr.ops for d in op.deps}
+            for op in tr.ops:
+                deps = [d + off for d in op.deps] if op.deps else list(root_deps)
+                ops.append(Op(op.uid + off, f"{prefix}s{si}.{op.name}",
+                              op.kind, deps, flops=op.flops, bytes=op.bytes,
+                              coll=op.coll, size_bytes=op.size_bytes,
+                              group=op.group, pool=seg.pool,
+                              repeat=op.repeat * seg.repeat,
+                              delay_us=op.delay_us))
+            tails = [op.uid + off for op in tr.ops
+                     if op.uid not in has_children]
+            seg_tails.append(tails)
+            if seg.transfer_bytes > 0 and si < len(wave.segments) - 1:
+                uid = len(ops)
+                ops.append(Op(uid, f"{prefix}s{si}.xfer", "coll", list(tails),
+                              coll="xfer", size_bytes=seg.transfer_bytes,
+                              group="xfer", pool=seg.pool))
+                xfer_uids.append(uid)
+                prev_tails = [uid]
+            else:
+                xfer_uids.append(None)
+                prev_tails = tails
+        marks.append({"release_uid": release_uid, "seg_tails": seg_tails,
+                      "xfer_uids": xfer_uids})
+    pools = sorted({seg.pool for w in waves for seg in w.segments})
+    return Trace(ops, meta=dict(meta or {}, pools=pools, wave_marks=marks))
+
+
 def compose_phases(segments: list[tuple[Trace, int]],
                    transfers: list[float] | tuple[float, ...] = (),
                    meta: dict[str, Any] | None = None) -> Trace:
@@ -330,25 +436,10 @@ def compose_phases(segments: list[tuple[Trace, int]],
     i's tails.  ``transfers[i]`` (bytes) inserts a cross-partition transfer
     collective (group ``"xfer"``, e.g. the KV-cache handoff between a
     prefill and a decode pool) on that boundary; 0 means a bare dependency
-    edge.  Input traces are not mutated (they may be cache-interned)."""
-    ops: list[Op] = []
-    prev_tails: list[int] = []
-    for si, (tr, pool) in enumerate(segments):
-        off = len(ops)
-        has_children = {d for op in tr.ops for d in op.deps}
-        for op in tr.ops:
-            deps = [d + off for d in op.deps] if op.deps else list(prev_tails)
-            ops.append(Op(op.uid + off, f"s{si}.{op.name}", op.kind, deps,
-                          flops=op.flops, bytes=op.bytes, coll=op.coll,
-                          size_bytes=op.size_bytes, group=op.group, pool=pool))
-        tails = [op.uid + off for op in tr.ops if op.uid not in has_children]
-        size = transfers[si] if si < len(transfers) else 0.0
-        if size > 0 and si < len(segments) - 1:
-            uid = len(ops)
-            ops.append(Op(uid, f"s{si}.xfer", "coll", list(tails),
-                          coll="xfer", size_bytes=size, group="xfer",
-                          pool=pool))
-            prev_tails = [uid]
-        else:
-            prev_tails = tails
-    return Trace(ops, meta=dict(meta or {}, pools=sorted({p for _, p in segments})))
+    edge.  The single-wave special case of ``compose_request_waves``."""
+    segs = tuple(
+        WaveSegment(tr, pool,
+                    transfer_bytes=(transfers[si] if si < len(transfers)
+                                    else 0.0))
+        for si, (tr, pool) in enumerate(segments))
+    return compose_request_waves([Wave(segs)], meta=meta)

@@ -193,9 +193,25 @@ def test_scheduling_policy_changes_schedule():
 def test_group_dims_cover_parallelism():
     par = Parallelism(1024, dp=16, sp=4, pp=2)  # tp = 8
     g = group_dims(system_2(), par)
+    net = system_2()
     for grp, need in (("tp", 8), ("sp", 4), ("dp", 16), ("pp", 2)):
-        got = math.prod(d.npus for d in g[grp]) if g[grp] else 1
+        got = math.prod(d.npus for _, d in g[grp]) if g[grp] else 1
         assert got == need, (grp, got, need)
+        # every carved dim reports the physical dim it was taken from
+        for src, d in g[grp]:
+            assert 0 <= src < len(net.dims)
+            assert d.bw == net.dims[src].bw
+
+
+def test_dollar_cost_pinned_2dim_fabric():
+    """Pin the LIBRA-style cost of a known 2-dim fabric so future edits
+    can't silently shift the Perf-per-Cost reward: 8 parallel ring(4)@100
+    groups at tier 1.0 (4 links * 100 * 8 = 3200) + 4 parallel switch(8)@50
+    groups at tier 2.0 with the 1.5x switch premium
+    (8 links * 50 * 2.0 * 1.5 * 4 = 4800)."""
+    net = build_network(("ring", "switch"), (4, 8), (100, 50))
+    assert net.n_npus == 32
+    assert net.dollar_cost() == pytest.approx(8000.0)
 
 
 def test_evaluate_full_pipeline():
