@@ -1,66 +1,41 @@
-"""Shared benchmark plumbing: target systems, default PsA, CSV emission."""
+"""Shared benchmark plumbing: CSV emission, budgets, and thin delegates to
+the first-class registries (`repro.core.systems`) — the env/pset assembly
+that used to live here is now the library's own front door."""
 from __future__ import annotations
 
 import os
 import time
-from dataclasses import dataclass
 from typing import Any, Callable
 
-from repro.configs import ARCHS
-from repro.core.compute import (SYSTEM_1_DEVICE, SYSTEM_2_DEVICE,
-                                SYSTEM_3_DEVICE, Device)
+from repro.core.compute import Device
 from repro.core.env import CosmicEnv
-from repro.core.psa import ParameterSet, paper_psa
-from repro.core.topology import system_1, system_2, system_3
+from repro.core.psa import ParameterSet
+from repro.core.systems import (SYSTEM_REGISTRY, get_system, system_env,
+                                system_pset)
 
 # search budget per DSE run; scaled by BENCH_SCALE env (default keeps the
 # whole suite minutes-scale on one CPU core)
 STEPS = int(os.environ.get("BENCH_STEPS", "400"))
 SEEDS = tuple(range(int(os.environ.get("BENCH_SEEDS", "2"))))
 
+# legacy view over the system registry (benchmark modules index
+# SYSTEMS[name] -> (n_npus, device))
 SYSTEMS: dict[str, tuple[int, Device]] = {
-    "system1": (512, SYSTEM_1_DEVICE),
-    "system2": (1024, SYSTEM_2_DEVICE),
-    "system3": (2048, SYSTEM_3_DEVICE),
+    name: (p.n_npus, p.device) for name, p in SYSTEM_REGISTRY.items()
 }
-
-# Table-3 baseline stacks used as pinned defaults for single-stack DSE
-BASE_DEFAULTS = {
-    "system1": dict(sched_policy="fifo", coll_algo=("ring", "ring", "ring", "rhd"),
-                    chunks=2, multidim_coll="baseline",
-                    topology=("ring", "ring", "ring", "switch"),
-                    npus_per_dim=(4, 4, 4, 8), bw_per_dim=(200, 200, 200, 50)),
-    "system2": dict(sched_policy="fifo", coll_algo=("ring", "direct", "ring", "rhd"),
-                    chunks=2, multidim_coll="baseline",
-                    topology=("ring", "fc", "ring", "switch"),
-                    npus_per_dim=(4, 8, 4, 8), bw_per_dim=(400, 200, 150, 100)),
-    "system3": dict(sched_policy="fifo", coll_algo=("direct", "rhd", "ring", "ring"),
-                    chunks=2, multidim_coll="baseline",
-                    topology=("fc", "switch", "ring", "ring"),
-                    npus_per_dim=(8, 16, 4, 4), bw_per_dim=(450, 100, 50, 50)),
-}
-WORKLOAD_DEFAULTS = dict(dp=64, pp=1, sp=4, weight_sharded=1)
 
 
 def make_env(arch: str, system: str, *, batch: int = 1024, seq: int | None = None,
              objective: str = "perf_per_bw", mode: str = "train",
              scenario=None, eval_store: dict | None = None,
              decode_tokens: int = 64) -> CosmicEnv:
-    n, dev = SYSTEMS[system]
-    spec = ARCHS[arch]
-    return CosmicEnv(spec=spec, n_npus=n, device=dev, scenario=scenario,
-                     batch=batch, seq=seq or spec.max_seq, mode=mode,
-                     decode_tokens=decode_tokens, objective=objective,
-                     eval_store=eval_store)
+    return system_env(arch, system, batch=batch, seq=seq,
+                      objective=objective, mode=mode, scenario=scenario,
+                      eval_store=eval_store, decode_tokens=decode_tokens)
 
 
 def make_pset(system: str, *, stacks: set[str] | None = None, max_pp: int = 4) -> ParameterSet:
-    n, _ = SYSTEMS[system]
-    ps = paper_psa(n, max_pp=max_pp)
-    if stacks is not None:
-        defaults = {**BASE_DEFAULTS[system], **WORKLOAD_DEFAULTS}
-        ps = ps.restrict(stacks, defaults)
-    return ps
+    return system_pset(system, stacks=stacks, max_pp=max_pp)
 
 
 # multi-wave load point for the pipelined-vs-analytic disagg comparison
@@ -86,10 +61,8 @@ def compare_pipelined_vs_analytic(batch: int = 512, seq: int = 2048,
     for pipelined in (True, False):
         sc = DisaggServeScenario(batch, seq, decode_tokens,
                                  pipelined=pipelined)
-        env = CosmicEnv(spec=ARCHS[PIPELINE_COMPARE_ARCH],
-                        n_npus=SYSTEMS["system2"][0],
-                        device=SYSTEMS["system2"][1], scenario=sc,
-                        objective="latency")
+        env = system_env(PIPELINE_COMPARE_ARCH, "system2", scenario=sc,
+                         objective="latency")
         out[pipelined] = env.evaluate_config(PIPELINE_COMPARE_CFG)
     return out
 

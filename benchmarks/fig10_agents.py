@@ -1,19 +1,20 @@
 """Fig. 9/10: agent comparison — RW/GA/ACO/BO on full-stack GPT3-175B DSE:
 convergence speed (steps to peak), final reward, and distinctness of the
-discovered configurations.  The convergence rows run the batched engine in
-its sequential mode (batch_size=1: per-point feedback, like the paper's
-Fig. 10, so steps_to_peak is comparable across agents) but still ride the
-trace/collective caches; the throughput row measures the population path
-(batch 32) against the uncached sequential loop (the seed baseline)."""
+discovered configurations.  The whole comparison is ONE declarative study
+(four agents, one seed, shared eval_store): the campaign runs the batched
+engine in its sequential mode (batch_size=1: per-point feedback, like the
+paper's Fig. 10, so steps_to_peak is comparable across agents) but still
+rides the trace/collective caches; the throughput row measures the
+population path (batch 32) against the uncached sequential loop (the seed
+baseline)."""
 from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from benchmarks.common import STEPS, emit, make_env, make_pset, timed
+from benchmarks.common import STEPS, emit, make_env, make_pset
 from repro.core import cache
 from repro.core.dse import run_search
+from repro.core.study import StudySpec, run_study
 
 AGENTS = ("rw", "ga", "aco", "bo")
 
@@ -40,36 +41,36 @@ def dse_throughput(steps: int = 500, arch: str = "gpt3-13b") -> tuple[float, flo
     return seq, batched
 
 
+def agents_study(steps: int) -> StudySpec:
+    """All four agents over the same space as one campaign — any design
+    point one agent visited is free for the rest (shared eval store).
+    BO's cubic GP cost caps its per-cell budget."""
+    return StudySpec(
+        name="fig10-agents", arch="gpt3-175b", system="system2",
+        scenario="train", objective="perf_per_bw",
+        agents=tuple({"kind": a, "steps": min(steps, 200)} if a == "bo"
+                     else a for a in AGENTS),
+        seeds=(0,), steps=steps, batch_size=1)
+
+
 def run(steps: int | None = None) -> list[tuple]:
     steps = steps or max(STEPS, 300)
     rows = []
-    results = {}
-    # all four agents explore the same space over the same system: a shared
-    # eval store means a design point any agent already visited is free for
-    # the rest of the sweep
-    store: dict = {}
-    store_hits = store_misses = 0
-    for agent in AGENTS:
-        # BO's cubic GP cost caps its budget
-        s = min(steps, 200) if agent == "bo" else steps
-        env = make_env("gpt3-175b", "system2", eval_store=store)
-        res, us = timed(lambda: run_search(
-            make_pset("system2"), env, agent, steps=s, seed=0))
-        store_hits += env.store_hits
-        store_misses += env.store_misses
-        results[agent] = res
-        rows.append((f"fig10_{agent}", us / s,
+    study = run_study(agents_study(steps))
+    for cell in study.outcomes:
+        res = cell.result
+        rows.append((f"fig10_{cell.agent}", res.wall_s * 1e6 / res.steps,
                      f"best={res.best_reward:.3e} steps_to_peak={res.steps_to_peak} "
                      f"invalid_rate={res.invalid_rate:.2f} "
                      f"points_per_s={res.points_per_s:.0f}"))
-    lookups = store_hits + store_misses
+    lookups = study.store_hits + study.store_misses
     rows.append(("fig10_eval_store", 0.0,
-                 f"hits={store_hits} misses={store_misses} "
-                 f"hit_rate={store_hits / max(lookups, 1):.2f} "
-                 f"distinct_points={len(store)}"))
+                 f"hits={study.store_hits} misses={study.store_misses} "
+                 f"hit_rate={study.store_hits / max(lookups, 1):.2f} "
+                 f"distinct_points={study.distinct_points}"))
     # Fig 9: distinct high-performing configs across agents
-    cfgs = [tuple(sorted((k, str(v)) for k, v in r.best_config.items()))
-            for r in results.values() if r.best_config]
+    cfgs = [tuple(sorted((k, str(v)) for k, v in o.result.best_config.items()))
+            for o in study.outcomes if o.result.best_config]
     rows.append(("fig9_distinct_optima", 0.0,
                  f"distinct={len(set(cfgs))}_of_{len(cfgs)}"))
     seq, batched = dse_throughput(steps=steps)  # 500 via BENCH_STEPS=500

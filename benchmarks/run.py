@@ -1,9 +1,12 @@
 """Benchmark harness — one module per paper table/figure + the roofline.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig6,roofline] [--steps N]
+    PYTHONPATH=src python -m benchmarks.run --study study.json [--resume]
 
 Prints ``name,us_per_call,derived`` CSV (us_per_call = mean simulator/DSE
-step cost where applicable).
+step cost where applicable).  The DSE-driven modules (fig10, serve) run as
+declarative studies; ``--study`` forwards an arbitrary serialized
+``StudySpec`` to the ``repro.dse`` campaign runner.
 """
 from __future__ import annotations
 
@@ -16,7 +19,21 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="comma-separated module list")
     ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--study", default=None,
+                    help="run a StudySpec JSON via repro.dse instead of the "
+                         "benchmark modules")
+    ap.add_argument("--resume", action="store_true",
+                    help="with --study: skip cells already in the results file")
     args = ap.parse_args()
+
+    if args.study:
+        from repro.dse import main as dse_main
+        argv = ["run", args.study]
+        if args.resume:
+            argv.append("--resume")
+        if args.steps is not None:
+            argv += ["--steps", str(args.steps)]
+        raise SystemExit(dse_main(argv))
 
     from benchmarks import (calibration, fig4_spread, fig6_fullstack,
                             fig8_scalability, fig10_agents, roofline,

@@ -1,6 +1,6 @@
 """Scenario sweep: monolithic serving vs disaggregated prefill/decode vs
 request-stream (arrival-driven, queueing) vs multi-tenant partitioning,
-each a full-stack GA search on gpt3-13b/system2.
+each a declarative full-stack GA study on gpt3-13b/system2.
 
 Rows report best end-to-end latency (serving), the disagg-vs-monolithic
 latency ratio (the disaggregation win), the pipelined-vs-analytic
@@ -9,35 +9,32 @@ stream, and weighted SLO attainment for the multi-tenant cluster.
 """
 from __future__ import annotations
 
-from benchmarks.common import (STEPS, SYSTEMS, compare_pipelined_vs_analytic,
-                               emit, make_env, make_pset)
-from repro.configs import ARCHS
-from repro.core.dse import run_search
-from repro.core.scenario import (DisaggServeScenario, MultiTenantScenario,
-                                 RequestStreamScenario, Tenant, TrainScenario,
-                                 scenario_psa)
-
-N_NPUS = SYSTEMS["system2"][0]
+from benchmarks.common import STEPS, compare_pipelined_vs_analytic, emit
+from repro.core.dse import SearchResult
+from repro.core.study import StudySpec, run_study
 
 
-def _search(scenario, objective: str, steps: int, arch: str = "gpt3-13b"):
-    pset = scenario_psa(make_pset("system2"), scenario, N_NPUS)
-    with make_env(arch, "system2", scenario=scenario,
-                  objective=objective) as env:
-        return run_search(pset, env, "ga", steps=steps, seed=0,
-                          batch_size=32)
+def _study(name: str, scenario: str, params: dict, objective: str,
+           steps: int, arch: str = "gpt3-13b") -> tuple[StudySpec, SearchResult]:
+    spec = StudySpec(name=name, arch=arch, system="system2",
+                     scenario=scenario, scenario_params=params,
+                     objective=objective, agents=("ga",), seeds=(0,),
+                     steps=steps, batch_size=32)
+    return spec, run_study(spec).outcomes[0].result
 
 
 def run(steps: int | None = None) -> list[tuple]:
     steps = steps or STEPS
     rows = []
 
-    mono = _search(TrainScenario(64, 2048, "serve"), "latency", steps)
+    _, mono = _study("serve-monolithic", "train",
+                     dict(batch=64, seq=2048, mode="serve"), "latency", steps)
     rows.append(("serve_monolithic", 0.0,
                  f"best_latency_ms={mono.best_latency_ms:.1f} "
                  f"points_per_s={mono.points_per_s:.0f}"))
 
-    dis = _search(DisaggServeScenario(64, 2048), "latency", steps)
+    _, dis = _study("serve-disagg", "disagg-serve", dict(batch=64, seq=2048),
+                    "latency", steps)
     cfg = dis.best_config or {}
     rows.append(("serve_disagg", 0.0,
                  f"best_latency_ms={dis.best_latency_ms:.1f} "
@@ -55,14 +52,13 @@ def run(steps: int | None = None) -> list[tuple]:
                  f"analytic_ms={cmp[False].latency_ms:.1f} "
                  f"speedup=x{cmp[False].latency_ms / max(cmp[True].latency_ms, 1e-9):.3f}"))
 
-    stream_sc = RequestStreamScenario(n_requests=64, seq=2048,
-                                      decode_tokens=64, rate_rps=8.0)
-    stream = _search(stream_sc, "goodput", steps)
+    stream_spec, stream = _study(
+        "serve-request-stream", "request-stream",
+        dict(n_requests=64, seq=2048, decode_tokens=64, rate_rps=8.0),
+        "goodput", steps)
     sd = {}
     if stream.best_config:
-        with make_env("gpt3-13b", "system2", scenario=stream_sc,
-                      objective="goodput") as env:
-            sd = env.evaluate_config(stream.best_config).detail
+        sd = stream_spec.build_env().evaluate_config(stream.best_config).detail
     rows.append(("serve_request_stream", 0.0,
                  f"goodput_rps={stream.best_reward:.2f} "
                  f"ttft_p99_ms={sd.get('ttft_p99_ms', 0):.1f} "
@@ -70,14 +66,16 @@ def run(steps: int | None = None) -> list[tuple]:
                  f"waves={sd.get('waves')} "
                  f"points_per_s={stream.points_per_s:.0f}"))
 
-    tenants = (
-        Tenant("train-13b", ARCHS["gpt3-13b"], 512, 2048, "train",
-               slo_ms=4e5, weight=2.0),
-        Tenant("serve-13b", ARCHS["gpt3-13b"], 64, 2048, "serve", slo_ms=3e3),
-        Tenant("serve-1.5b", ARCHS["qwen2-1.5b"], 64, 2048, "serve",
-               slo_ms=3e2, device_name="system3-h100"),
-    )
-    mt = _search(MultiTenantScenario(tenants=tenants), "perf_per_bw", steps)
+    tenants = [
+        dict(name="train-13b", arch="gpt3-13b", batch=512, seq=2048,
+             phase="train", slo_ms=4e5, weight=2.0),
+        dict(name="serve-13b", arch="gpt3-13b", batch=64, seq=2048,
+             phase="serve", slo_ms=3e3),
+        dict(name="serve-1.5b", arch="qwen2-1.5b", batch=64, seq=2048,
+             phase="serve", slo_ms=3e2, device_name="system3-h100"),
+    ]
+    _, mt = _study("multi-tenant", "multi-tenant", dict(tenants=tenants),
+                   "perf_per_bw", steps)
     sizes = (mt.best_config or {}).get("tenant_npus")
     rows.append(("multi_tenant", 0.0,
                  f"weighted_slo_attainment={mt.best_reward:.3f} "

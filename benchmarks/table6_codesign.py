@@ -13,11 +13,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (BASE_DEFAULTS, SEEDS, STEPS, WORKLOAD_DEFAULTS,
-                               emit, make_env, make_pset, timed)
+from benchmarks.common import SEEDS, STEPS, emit, make_env, make_pset, timed
 from repro.core.dse import run_search
-from repro.core.env import CosmicEnv
-from repro.core.psa import paper_psa
 
 
 def _fmt(cfg: dict) -> str:

@@ -2,11 +2,11 @@
 decode pools beat the best monolithic serving config the same search budget
 can find?
 
-Two full-stack GA searches over the same system and budget:
+Two declarative studies over the same system and budget:
 
-  monolithic  TrainScenario(mode="serve") — one pool, one parallelization
-              for both phases (the engine's original serving model);
-  disagg      DisaggServeScenario — the agent additionally searches the
+  monolithic  scenario="train" (mode="serve") — one pool, one
+              parallelization for both phases;
+  disagg      scenario="disagg-serve" — the agent additionally searches the
               scenario stack (prefill_frac, decode_batch), so prefill can
               keep MXU-efficient moderate TP while decode shards weight/KV
               reads across its own pool.
@@ -15,14 +15,8 @@ Two full-stack GA searches over the same system and budget:
                                 [--arch gpt3-13b] [--batch-size 32]
 """
 import argparse
-import sys
-from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parent.parent))  # for benchmarks/
-
-from benchmarks.common import SYSTEMS, make_env, make_pset
-from repro.core.dse import run_search
-from repro.core.scenario import DisaggServeScenario, TrainScenario, scenario_psa
+from repro.core.study import StudySpec, run_study
 
 
 def main():
@@ -41,20 +35,21 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    n_npus = SYSTEMS[args.system][0]
-    mono_sc = TrainScenario(args.requests, args.seq, "serve",
-                            args.decode_tokens)
-    disagg_sc = DisaggServeScenario(args.requests, args.seq,
-                                    args.decode_tokens)
-
+    scenarios = {
+        "monolithic": ("train", dict(batch=args.requests, seq=args.seq,
+                                     mode="serve",
+                                     decode_tokens=args.decode_tokens)),
+        "disagg": ("disagg-serve", dict(batch=args.requests, seq=args.seq,
+                                        decode_tokens=args.decode_tokens)),
+    }
     results = {}
-    for name, sc in (("monolithic", mono_sc), ("disagg", disagg_sc)):
-        pset = scenario_psa(make_pset(args.system), sc, n_npus)
-        with make_env(args.arch, args.system, scenario=sc,
-                      objective="latency") as env:
-            res = run_search(pset, env, "ga", steps=args.steps,
-                             seed=args.seed, batch_size=args.batch_size,
-                             workers=args.workers)
+    for name, (kind, params) in scenarios.items():
+        spec = StudySpec(
+            name=f"serve-{name}", arch=args.arch, system=args.system,
+            scenario=kind, scenario_params=params, objective="latency",
+            agents=("ga",), seeds=(args.seed,), steps=args.steps,
+            batch_size=args.batch_size, workers=args.workers)
+        res = run_study(spec).outcomes[0].result
         results[name] = res
         print(f"{name:10s} best e2e latency {res.best_latency_ms:9.1f} ms "
               f"(reward {res.best_reward:.3e}, steps_to_peak "

@@ -1,18 +1,32 @@
 """The paper's headline experiment, runnable at desk scale:
 full-stack vs single-stack DSE for GPT3-175B (Fig. 6), with all four agents
-compared (Fig. 10), driven by the batched evaluation engine.
+compared (Fig. 10) — each experiment a declarative ``StudySpec`` executed by
+the campaign runner (shared eval_store + process pool across cells).
+
+Every study here can be serialized (``--dump-specs DIR``) and re-run
+bit-identically via ``python -m repro.dse run <spec>.json``.
 
     PYTHONPATH=src python examples/dse_full_stack.py [--steps 600]
                                                      [--batch 32] [--workers 0]
 """
 import argparse
-import sys
-from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parent.parent))  # for benchmarks/
+from repro.core.study import StudySpec, run_study
 
-from benchmarks.common import BASE_DEFAULTS, WORKLOAD_DEFAULTS, make_env, make_pset
-from repro.core.dse import run_search
+STACK_SCENARIOS = {
+    "workload-only": ("workload",),
+    "collective-only": ("collective",),
+    "network-only": ("network",),
+    "full-stack": None,
+}
+
+
+def stack_study(stacks, args, *, agents=("ga",), name: str) -> StudySpec:
+    return StudySpec(
+        name=name, arch="gpt3-175b", system=args.system,
+        scenario="train", objective="perf_per_bw",
+        stacks=stacks, agents=agents, seeds=(0,), steps=args.steps,
+        batch_size=args.batch, workers=args.workers)
 
 
 def main():
@@ -23,39 +37,44 @@ def main():
                     help="population evaluated per agent round (1 = sequential)")
     ap.add_argument("--workers", type=int, default=0,
                     help=">1 fans each batch out to a process pool")
+    ap.add_argument("--dump-specs", default=None,
+                    help="also write each StudySpec JSON into this directory")
     args = ap.parse_args()
 
-    scenarios = {
-        "workload-only": {"workload"},
-        "collective-only": {"collective"},
-        "network-only": {"network"},
-        "full-stack": None,
-    }
+    def maybe_dump(spec: StudySpec) -> StudySpec:
+        if args.dump_specs:
+            from pathlib import Path
+            d = Path(args.dump_specs)
+            d.mkdir(parents=True, exist_ok=True)
+            spec.to_json(d / f"{spec.name}.json")
+        return spec
+
     print(f"== single-stack vs full-stack (GPT3-175B, {args.system}, GA, "
           f"batch={args.batch}) ==")
     best = {}
-    for name, stacks in scenarios.items():
-        ps = make_pset(args.system, stacks=stacks)
-        with make_env("gpt3-175b", args.system) as env:
-            res = run_search(ps, env, "ga", steps=args.steps, seed=0,
-                             batch_size=args.batch, workers=args.workers)
+    for name, stacks in STACK_SCENARIOS.items():
+        spec = maybe_dump(stack_study(stacks, args, name=f"fullstack-{name}"))
+        res = run_study(spec).outcomes[0].result
         best[name] = res
         print(f"{name:16s} reward={res.best_reward:.3e} "
               f"latency={res.best_latency_ms:9.1f} ms "
               f"steps_to_peak={res.steps_to_peak} "
               f"points_per_s={res.points_per_s:7.0f}")
     full = best["full-stack"].best_reward
-    for name in scenarios:
+    for name in STACK_SCENARIOS:
         if name != "full-stack":
             print(f"full-stack vs {name}: x{full / max(best[name].best_reward, 1e-30):.2f}")
 
     print(f"\n== agent comparison (full stack, {args.steps} steps) ==")
-    for agent in ("rw", "ga", "aco", "bo"):
-        steps = min(args.steps, 200) if agent == "bo" else args.steps
-        with make_env("gpt3-175b", args.system) as env:
-            res = run_search(make_pset(args.system), env, agent, steps=steps,
-                             seed=0, batch_size=args.batch, workers=args.workers)
-        print(f"{agent:4s} best={res.best_reward:.3e} steps_to_peak={res.steps_to_peak} "
+    # one study, four agents, one shared eval_store: BO's cubic GP cost caps
+    # its per-cell budget at 200 steps
+    spec = maybe_dump(stack_study(
+        None, args, name="fullstack-agents",
+        agents=("rw", "ga", "aco",
+                {"kind": "bo", "steps": min(args.steps, 200)})))
+    for cell in run_study(spec).outcomes:
+        res = cell.result
+        print(f"{cell.agent:4s} best={res.best_reward:.3e} steps_to_peak={res.steps_to_peak} "
               f"invalid_rate={res.invalid_rate:.2f} "
               f"points_per_s={res.points_per_s:.0f}")
 

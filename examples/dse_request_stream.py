@@ -1,20 +1,21 @@
 """Request-stream serving DSE: search {batch window, max inflight,
 prefill_frac, decode_batch} (plus the full workload/collective/network
-stacks) against an arrival-driven request load.
+stacks) against an arrival-driven request load — as one declarative study.
 
 Requests arrive by a Poisson process, queue, and admit in waves under the
 searched batching window; admitted waves run through disaggregated
-prefill/decode pools as ONE pipelined multi-wave trace (wave k+1's prefill
-overlapping wave k's decode in the event-driven simulator).  The reward is
+prefill/decode pools as ONE pipelined multi-wave trace.  The reward is
 streaming: goodput = requests meeting both the TTFT and TPOT SLOs, per
-second; TTFT/TPOT p50/p99 are reported for the best design.
+second.  ``--prompt-len-range``/``--decode-len-range`` switch the stream to
+heterogeneous per-request lengths drawn from a seeded distribution.
 
 Also prints the pipelined-vs-analytic disagg comparison on a multi-wave
 load point (the pipelined multi-wave trace must beat the analytic
-single-wave composition there).
+composition there).
 
     PYTHONPATH=src python examples/dse_request_stream.py [--steps 500]
                                 [--arch gpt3-13b] [--rate 8] [--requests 64]
+                                [--prompt-len-range 256 2048]
 """
 import argparse
 import sys
@@ -22,11 +23,8 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))  # for benchmarks/
 
-from benchmarks.common import (PIPELINE_COMPARE_ARCH, SYSTEMS,
-                               compare_pipelined_vs_analytic, make_env,
-                               make_pset)
-from repro.core.dse import run_search
-from repro.core.scenario import RequestStreamScenario, scenario_psa
+from benchmarks.common import PIPELINE_COMPARE_ARCH, compare_pipelined_vs_analytic
+from repro.core.study import StudySpec, run_study
 
 
 def print_pipelined_vs_analytic() -> None:
@@ -52,6 +50,12 @@ def main():
                     help="requests in the simulated stream")
     ap.add_argument("--seq", type=int, default=2048, help="prompt length")
     ap.add_argument("--decode-tokens", type=int, default=64)
+    ap.add_argument("--prompt-len-range", type=int, nargs=2, default=None,
+                    metavar=("LO", "HI"),
+                    help="per-request prompt lengths ~ seeded uniform")
+    ap.add_argument("--decode-len-range", type=int, nargs=2, default=None,
+                    metavar=("LO", "HI"),
+                    help="per-request decode lengths ~ seeded uniform")
     ap.add_argument("--ttft-slo-ms", type=float, default=4000.0)
     ap.add_argument("--tpot-slo-ms", type=float, default=200.0)
     ap.add_argument("--batch-size", type=int, default=32,
@@ -60,17 +64,20 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    n_npus = SYSTEMS[args.system][0]
-    sc = RequestStreamScenario(
-        n_requests=args.requests, seq=args.seq,
-        decode_tokens=args.decode_tokens, rate_rps=args.rate,
-        seed=args.seed, ttft_slo_ms=args.ttft_slo_ms,
-        tpot_slo_ms=args.tpot_slo_ms)
-    pset = scenario_psa(make_pset(args.system), sc, n_npus)
-    with make_env(args.arch, args.system, scenario=sc,
-                  objective="goodput") as env:
-        res = run_search(pset, env, "ga", steps=args.steps, seed=args.seed,
-                         batch_size=args.batch_size, workers=args.workers)
+    params = dict(n_requests=args.requests, seq=args.seq,
+                  decode_tokens=args.decode_tokens, rate_rps=args.rate,
+                  seed=args.seed, ttft_slo_ms=args.ttft_slo_ms,
+                  tpot_slo_ms=args.tpot_slo_ms)
+    if args.prompt_len_range:
+        params["prompt_len_range"] = tuple(args.prompt_len_range)
+    if args.decode_len_range:
+        params["decode_len_range"] = tuple(args.decode_len_range)
+    spec = StudySpec(
+        name="request-stream", arch=args.arch, system=args.system,
+        scenario="request-stream", scenario_params=params,
+        objective="goodput", agents=("ga",), seeds=(args.seed,),
+        steps=args.steps, batch_size=args.batch_size, workers=args.workers)
+    res = run_study(spec).outcomes[0].result
 
     print(f"request-stream GA @ {args.steps} steps on {args.arch}/"
           f"{args.system}, {args.rate} req/s Poisson load:")
@@ -80,8 +87,7 @@ def main():
           f"points_per_s {res.points_per_s:.0f}")
     if res.best_config:
         cfg = res.best_config
-        ev = env.evaluate_config(cfg)
-        d = ev.detail
+        d = spec.build_env().evaluate_config(cfg).detail
         print(f"  best design: DP={cfg['dp']} SP={cfg['sp']} PP={cfg['pp']} "
               f"prefill_frac={cfg['prefill_frac']} "
               f"decode_batch={cfg['decode_batch']} "
@@ -92,6 +98,11 @@ def main():
               f" ms; goodput {d['goodput_rps']:.2f} req/s "
               f"({d['n_ok']}/{d['n_requests']} in SLO over "
               f"{d['horizon_ms']:.0f} ms, {d['waves']} waves)")
+        if "prompt_len_mean" in d:
+            print(f"  heterogeneous lengths: prompt mean/max "
+                  f"{d['prompt_len_mean']:.0f}/{d['prompt_len_max']} tok, "
+                  f"decode mean/max {d['decode_len_mean']:.1f}/"
+                  f"{d['decode_len_max']} tok")
 
     print_pipelined_vs_analytic()
 

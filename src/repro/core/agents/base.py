@@ -43,6 +43,11 @@ class Agent:
             self.observe(config, reward)
 
 
+# the registered agent kinds, importable without the agent modules (StudySpec
+# validates agent grids at spec time, before any search machinery loads)
+KNOWN_AGENTS = ("rw", "ga", "aco", "bo")
+
+
 def make_agent(kind: str, space: DesignSpace, seed: int = 0, **hyper) -> Agent:
     from repro.core.agents.aco import AntColony
     from repro.core.agents.bayesian import BayesianOptimizer
@@ -51,4 +56,9 @@ def make_agent(kind: str, space: DesignSpace, seed: int = 0, **hyper) -> Agent:
 
     kinds = {"rw": RandomWalker, "ga": GeneticAlgorithm,
              "aco": AntColony, "bo": BayesianOptimizer}
+    assert set(kinds) == set(KNOWN_AGENTS), \
+        "KNOWN_AGENTS out of sync with make_agent's registry"
+    if kind not in kinds:
+        raise ValueError(f"unknown agent kind {kind!r}; "
+                         f"known: {sorted(kinds)}")
     return kinds[kind](space, seed=seed, **hyper)

@@ -31,7 +31,7 @@ from typing import Any, Sequence
 from repro.configs.base import ArchSpec
 from repro.core.cache import cache_epoch, caches_enabled
 from repro.core.compute import Device
-from repro.core.rewards import REWARDS, STREAM_OBJECTIVES, Evaluation
+from repro.core.rewards import Evaluation, Objective, get_objective
 from repro.core.scenario import EnvContext, Scenario, TrainScenario
 from repro.core.simulator import SystemConfig
 from repro.core.topology import Network, build_network
@@ -95,7 +95,10 @@ class CosmicEnv:
     seq: int | None = None
     mode: str | None = "train"
     decode_tokens: int | None = 64
-    objective: str = "perf_per_bw"
+    # an Objective-registry name or an Objective instance; resolved to an
+    # Objective at construction (self.objective is always an Objective after
+    # __post_init__)
+    objective: "str | Objective" = "perf_per_bw"
     capacity_gb: float = 24.0
     fixed_network: Network | None = None   # for workload/collective-only DSE
     # optional cross-search shared memo (see module docstring)
@@ -112,23 +115,21 @@ class CosmicEnv:
 
     def __post_init__(self) -> None:
         # fail at construction on a bad objective, not deep in a search:
-        # classic one-latency rewards (REWARDS) for every scenario, plus the
-        # streaming objectives (STREAM_OBJECTIVES, e.g. "goodput") for
-        # scenarios that resolve per-request metrics themselves
-        known = set(REWARDS) | set(STREAM_OBJECTIVES)
-        if self.objective not in known:
-            raise ValueError(f"unknown objective {self.objective!r}; "
-                             f"known: {sorted(known)}")
-        if self.objective in STREAM_OBJECTIVES and self.scenario is not None \
+        # resolve the name through the Objective registry; streaming-required
+        # objectives (e.g. "goodput") additionally need a scenario that
+        # resolves per-request metrics itself
+        self.objective = get_objective(self.objective)
+        if self.objective.streaming and self.scenario is not None \
                 and not getattr(self.scenario, "supports_stream_objectives",
                                 False):
             raise ValueError(
-                f"objective {self.objective!r} needs a streaming scenario "
-                f"(per-request metrics); {type(self.scenario).__name__} "
-                f"only supports {sorted(REWARDS)}")
+                f"objective {self.objective.name!r} needs a streaming "
+                f"scenario (per-request metrics); "
+                f"{type(self.scenario).__name__} only supports scalar "
+                f"(one-latency) objectives")
         if self.scenario is None:
-            if self.objective in STREAM_OBJECTIVES:
-                raise ValueError(f"objective {self.objective!r} needs a "
+            if self.objective.streaming:
+                raise ValueError(f"objective {self.objective.name!r} needs a "
                                  f"streaming scenario, not the legacy "
                                  f"batch/seq TrainScenario path")
             if self.batch is None or self.seq is None:

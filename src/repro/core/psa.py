@@ -133,6 +133,35 @@ class ParameterSet:
                             self.constraints + list(constraints),
                             dict(self.fixed), name=name or self.name)
 
+    def pin(self, overrides: dict[str, Any]) -> "ParameterSet":
+        """A new ParameterSet with ``overrides`` pinned as fixed values —
+        how a StudySpec's ``psa_overrides`` narrow a search.  Every key must
+        name an existing parameter and every value must lie inside its
+        declared choices (per slot for multidim parameters) — a typo'd pin
+        must not silently search outside the design space."""
+        pinned: dict[str, Any] = {}
+        for k, v in overrides.items():
+            try:
+                p = self.by_name(k)
+            except KeyError:
+                raise ValueError(
+                    f"unknown pinned parameter {k!r}; known: "
+                    f"{[q.name for q in self.params]}") from None
+            if p.ndim == 1:
+                if v not in p.choices:
+                    raise ValueError(f"pin {k}={v!r} is outside the "
+                                     f"parameter's choices {p.choices}")
+                pinned[k] = v
+            else:
+                vv = tuple(v) if isinstance(v, (list, tuple)) else (v,)
+                if len(vv) != p.ndim or any(x not in p.choices for x in vv):
+                    raise ValueError(
+                        f"pin {k}={v!r} must be {p.ndim} values, each from "
+                        f"{p.choices}")
+                pinned[k] = vv
+        return ParameterSet(self.params, self.constraints,
+                            {**self.fixed, **pinned}, name=self.name)
+
     def cardinality(self) -> float:
         """Raw design-space size (unconstrained product — Table 1's count)."""
         total = 1.0
@@ -167,6 +196,21 @@ class ParameterSet:
 # ---------------------------------------------------------------------------
 
 def pow2_range(lo: int, hi: int) -> tuple[int, ...]:
+    """All powers of two from ``lo`` to ``hi`` inclusive.  Both bounds must
+    themselves be powers of two — a non-power-of-two bound used to be
+    silently truncated (``pow2_range(1, 1000)`` -> ... 512), which turned a
+    typo'd cluster size into a quietly smaller design space."""
+    for v, side in ((lo, "lo"), (hi, "hi")):
+        if not isinstance(v, int) or v < 1:
+            raise ValueError(f"pow2_range {side}={v!r} must be a positive "
+                             f"integer power of two")
+        if v & (v - 1):
+            raise ValueError(
+                f"pow2_range {side}={v} is not a power of two "
+                f"(nearest are {2 ** (v.bit_length() - 1)} and "
+                f"{2 ** v.bit_length()})")
+    if lo > hi:
+        raise ValueError(f"pow2_range lo={lo} > hi={hi}")
     return tuple(2 ** i for i in range(int(math.log2(lo)), int(math.log2(hi)) + 1))
 
 

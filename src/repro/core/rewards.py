@@ -57,6 +57,80 @@ REWARDS: dict[str, Callable[[float, Network], float]] = {
 }
 
 
+# ---------------------------------------------------------------------------
+# Objective registry — first-class objective objects
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Objective:
+    """A first-class optimization objective, resolvable by name.
+
+    ``scalar_fn`` rewards one end-to-end latency (every scenario has one);
+    ``stream_fn`` rewards per-request ``StreamMetrics`` and is only
+    satisfiable by streaming scenarios.  An objective with ONLY a
+    ``stream_fn`` is *streaming-required* and is rejected at env/spec
+    construction for scenarios that can't produce per-request metrics.
+
+    Composite objectives (latency x cost, goodput per dollar, ...) are just
+    new ``Objective`` instances registered with ``register_objective`` —
+    neither the env nor the scenarios need to change.  Functions should be
+    module-level so envs stay picklable for the process pool."""
+    name: str
+    scalar_fn: Callable[[float, Network], float] | None = None
+    stream_fn: Callable[["StreamMetrics", Network], float] | None = None
+    doc: str = ""
+
+    def __post_init__(self):
+        if self.scalar_fn is None and self.stream_fn is None:
+            raise ValueError(f"objective {self.name!r} needs a scalar_fn "
+                             f"and/or a stream_fn")
+
+    @property
+    def streaming(self) -> bool:
+        """True when this objective REQUIRES per-request stream metrics."""
+        return self.scalar_fn is None
+
+    def scalar(self, latency_ms: float, net: Network) -> float:
+        if self.scalar_fn is None:
+            raise ValueError(f"objective {self.name!r} has no scalar form — "
+                             f"it needs a streaming scenario")
+        return self.scalar_fn(latency_ms, net)
+
+    def stream(self, metrics: "StreamMetrics", net: Network) -> float:
+        """Reward for per-request metrics; scalar-only objectives apply to
+        the p99 end-to-end request latency (so e.g. ``perf_per_cost`` still
+        regularizes by the network spend)."""
+        if self.stream_fn is not None:
+            return self.stream_fn(metrics, net)
+        return self.scalar_fn(metrics.latency_p99_ms, net)
+
+
+OBJECTIVES: dict[str, Objective] = {}
+
+
+def register_objective(obj: Objective, *, replace: bool = False) -> Objective:
+    if not replace and obj.name in OBJECTIVES:
+        raise ValueError(f"objective {obj.name!r} already registered")
+    OBJECTIVES[obj.name] = obj
+    return obj
+
+
+def get_objective(objective: "str | Objective") -> Objective:
+    """Resolve an objective by name (or pass an ``Objective`` through —
+    ad-hoc composites don't have to be registered)."""
+    if isinstance(objective, Objective):
+        return objective
+    try:
+        return OBJECTIVES[objective]
+    except KeyError:
+        raise ValueError(f"unknown objective {objective!r}; "
+                         f"known: {sorted(OBJECTIVES)}") from None
+
+
+def list_objectives() -> dict[str, Objective]:
+    return dict(OBJECTIVES)
+
+
 def slo_attainment(latency_ms: float, slo_ms: float) -> float:
     """Soft SLO attainment in [0, 1]: 1 when the latency meets the SLO,
     degrading proportionally when it misses (multi-tenant objective)."""
@@ -69,9 +143,10 @@ def slo_attainment(latency_ms: float, slo_ms: float) -> float:
 # Streaming (request-stream serving) objectives
 # ---------------------------------------------------------------------------
 
-# objectives a streaming scenario resolves itself instead of through REWARDS
-# (their reward is a function of per-request metrics, not one latency)
-STREAM_OBJECTIVES = ("goodput",)
+# kept as a compat alias; the source of truth is Objective.streaming
+# (an objective whose reward is a function of per-request metrics, not one
+# latency).  Derived after the built-in registrations below.
+STREAM_OBJECTIVES: tuple[str, ...] = ()
 
 
 def percentile(values: list[float], p: float) -> float:
@@ -125,22 +200,46 @@ def stream_metrics(ttft_ms: list[float], tpot_ms: list[float],
     )
 
 
-def stream_reward(objective: str, metrics: StreamMetrics,
+def stream_reward(objective: "str | Objective", metrics: StreamMetrics,
                   net: Network) -> float:
     """Resolve a streaming scenario's reward: ``goodput`` maximizes SLO-
-    meeting requests/sec; any ``REWARDS`` objective is applied to the p99
+    meeting requests/sec; any scalar objective is applied to the p99
     end-to-end request latency (so e.g. ``perf_per_cost`` still regularizes
     by the network spend)."""
-    if objective == "goodput":
-        return metrics.goodput_rps
-    return REWARDS[objective](metrics.latency_p99_ms, net)
+    return get_objective(objective).stream(metrics, net)
+
+
+def reward_goodput(metrics: StreamMetrics, net: Network) -> float:
+    return metrics.goodput_rps
+
+
+def reward_goodput_per_cost(metrics: StreamMetrics, net: Network) -> float:
+    """Composite example: SLO-meeting requests/sec per million network
+    dollars — extensible objectives never touch the env or the scenarios."""
+    return metrics.goodput_rps / max(net.dollar_cost() / 1e6, 1e-9)
+
+
+register_objective(Objective("perf_per_bw", scalar_fn=reward_perf_per_bw,
+                             doc="1/|latency * BW-per-NPU - 1| (paper 5.4)"))
+register_objective(Objective("perf_per_cost", scalar_fn=reward_perf_per_cost,
+                             doc="1/|latency * network-$ - 1| (paper 5.4)"))
+register_objective(Objective("latency", scalar_fn=reward_latency,
+                             doc="1/latency — raw end-to-end speed"))
+register_objective(Objective("goodput", stream_fn=reward_goodput,
+                             doc="SLO-meeting requests/sec (streaming only)"))
+register_objective(Objective(
+    "goodput_per_cost", stream_fn=reward_goodput_per_cost,
+    doc="SLO goodput per network $M (streaming only, composite)"))
+
+STREAM_OBJECTIVES = tuple(n for n, o in OBJECTIVES.items() if o.streaming)
 
 
 def evaluate(spec: ArchSpec, par: Parallelism, cfg: SystemConfig, *,
              batch: int, seq: int, mode: str = "train",
-             objective: str = "perf_per_bw",
+             objective: "str | Objective" = "perf_per_bw",
              capacity_gb: float = 24.0, decode_tokens: int = 64) -> Evaluation:
     """Full paper pipeline: WTG -> simulate -> reward (+ memory gate)."""
+    obj = get_objective(objective)
     if not par.valid():
         return Evaluation(0.0, float("inf"), False, {"why": "parallelization invalid"})
     fp = footprint(spec, par, batch=batch, seq=seq, mode=mode)
@@ -154,14 +253,14 @@ def evaluate(spec: ArchSpec, par: Parallelism, cfg: SystemConfig, *,
         dec = simulate(generate_trace(spec, par, batch=batch, seq=seq,
                                       mode="decode"), cfg, par)
         latency_ms = pre.latency_ms + decode_tokens * dec.latency_ms
-        r = REWARDS[objective](latency_ms, cfg.network)
+        r = obj.scalar(latency_ms, cfg.network)
         return Evaluation(r, latency_ms, True, {
             "footprint_gb": fp.total_gb,
             "prefill_ms": pre.latency_ms, "decode_ms": dec.latency_ms,
         })
     trace = generate_trace(spec, par, batch=batch, seq=seq, mode=mode)
     res = simulate(trace, cfg, par)
-    r = REWARDS[objective](res.latency_ms, cfg.network)
+    r = obj.scalar(res.latency_ms, cfg.network)
     return Evaluation(r, res.latency_ms, True, {
         "footprint_gb": fp.total_gb,
         "exposed_comm_us": res.exposed_comm_us,

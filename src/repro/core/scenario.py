@@ -36,9 +36,11 @@ Four built-ins:
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass, replace
-from typing import Any, ClassVar, Mapping, Protocol, runtime_checkable
+from typing import (Any, Callable, ClassVar, Mapping, Protocol,
+                    runtime_checkable)
 
 import numpy as np
 
@@ -47,8 +49,8 @@ from repro.core.cache import switchable_lru_cache
 from repro.core.compute import DEVICES, Device
 from repro.core.memory import footprint, kv_cache_bytes
 from repro.core.psa import Constraint, Parameter, ParameterSet
-from repro.core.rewards import (REWARDS, Evaluation, evaluate, slo_attainment,
-                                stream_metrics, stream_reward)
+from repro.core.rewards import (Evaluation, Objective, evaluate,
+                                slo_attainment, stream_metrics, stream_reward)
 from repro.core.simulator import SimResult, SystemConfig, simulate
 from repro.core.topology import (Cluster, Network, partition_cluster,
                                  sub_network, sub_network_indexed)
@@ -65,7 +67,7 @@ class EnvContext:
     spec: ArchSpec
     n_npus: int
     device: Device
-    objective: str
+    objective: Objective
     capacity_gb: float
     config: Mapping[str, Any]
     network: Network
@@ -81,7 +83,7 @@ class EnvContext:
     def reward(self, latency_ms: float) -> float:
         """The env objective applied to one end-to-end latency (scenarios
         with richer metrics — streaming — resolve rewards themselves)."""
-        return REWARDS[self.objective](latency_ms, self.sys_cfg.network)
+        return self.objective.scalar(latency_ms, self.sys_cfg.network)
 
 
 @runtime_checkable
@@ -169,8 +171,9 @@ def _decode_pool(n_dec: int, batch: int, decode_batch: int) -> tuple[Parallelism
 
 
 def _serving_wave_trace(spec: ArchSpec, par_pre: Parallelism,
-                        par_dec: Parallelism, *, seq: int, decode_tokens: int,
-                        wave_sizes: list[int], releases_ms: list[float],
+                        par_dec: Parallelism, *,
+                        wave_shapes: list[tuple[int, int, int]],
+                        releases_ms: list[float],
                         max_inflight: int | None,
                         meta: dict[str, Any]) -> Trace:
     """The pipelined multi-wave disagg trace: each wave is prefill (pool 0)
@@ -181,25 +184,30 @@ def _serving_wave_trace(spec: ArchSpec, par_pre: Parallelism,
     prefill behind wave w-max_inflight's completion, and ``releases_ms``
     gates each wave behind its arrival-process admission time.
 
+    ``wave_shapes`` is one ``(size, seq, decode_tokens)`` per wave —
+    heterogeneous request lengths reach the trace here, each wave padded to
+    its longest admitted prompt and chained to its longest decode.
+
     Memoized on every trace-shaping input (the network/collective stacks
     don't shape the trace), so design points differing only in those stacks
     share one composed trace — and its piggybacked simulator plan."""
     return _serving_wave_trace_cached(
-        spec, par_pre, par_dec, seq, decode_tokens, tuple(wave_sizes),
+        spec, par_pre, par_dec, tuple(tuple(s) for s in wave_shapes),
         tuple(releases_ms), max_inflight,
         str(meta.get("arch", "")), str(meta.get("scenario", "")))
 
 
 def _serving_wave_trace_impl(spec: ArchSpec, par_pre: Parallelism,
-                             par_dec: Parallelism, seq: int,
-                             decode_tokens: int, wave_sizes: tuple,
+                             par_dec: Parallelism, wave_shapes: tuple,
                              releases_ms: tuple, max_inflight: int | None,
                              arch: str, scenario: str) -> Trace:
     meta = dict(arch=arch, scenario=scenario)
     lanes = max(1, min(par_pre.n_npus, par_dec.n_npus))
-    last_seg = 2 if decode_tokens > 1 else 1
+    # each wave's last segment index (gates reference the EARLIER wave's
+    # completion, so a one-token wave's last segment is 1, not 2)
+    last_seg = [2 if dec > 1 else 1 for _, _, dec in wave_shapes]
     waves: list[Wave] = []
-    for w, size in enumerate(wave_sizes):
+    for w, (size, seq, decode_tokens) in enumerate(wave_shapes):
         pre = generate_trace(spec, par_pre, batch=size, seq=seq,
                              mode="prefill")
         dec = generate_trace(spec, par_dec, batch=size, seq=seq,
@@ -210,9 +218,9 @@ def _serving_wave_trace_impl(spec: ArchSpec, par_pre: Parallelism,
             segs.append(WaveSegment(dec, 1, decode_tokens - 1))
         gates = []
         if w >= 1:
-            gates.append((1, w - 1, last_seg))
+            gates.append((1, w - 1, last_seg[w - 1]))
         if max_inflight is not None and w >= max_inflight:
-            gates.append((0, w - max_inflight, last_seg))
+            gates.append((0, w - max_inflight, last_seg[w - max_inflight]))
         waves.append(Wave(tuple(segs), release_ms=releases_ms[w],
                           gates=tuple(gates)))
     return compose_request_waves(waves, meta=meta)
@@ -321,9 +329,9 @@ class DisaggServeScenario:
                          par_dec: Parallelism, waves: int,
                          resident: int) -> Trace:
         return _serving_wave_trace(
-            ctx.spec, par_pre, par_dec, seq=self.seq,
-            decode_tokens=self.decode_tokens,
-            wave_sizes=self._wave_sizes(waves, resident),
+            ctx.spec, par_pre, par_dec,
+            wave_shapes=[(size, self.seq, self.decode_tokens)
+                         for size in self._wave_sizes(waves, resident)],
             releases_ms=[0.0] * waves, max_inflight=None,
             meta=dict(arch=ctx.spec.name, scenario=self.name))
 
@@ -459,6 +467,40 @@ def _arrivals_impl(gaps_ms: tuple, n_requests: int, rate_rps: float,
 _arrivals_cached = switchable_lru_cache(maxsize=64)(_arrivals_impl)
 
 
+def _request_shapes_impl(n: int, seq: int, decode_tokens: int,
+                         prompt_lens: tuple, decode_lens: tuple,
+                         prompt_len_range: tuple, decode_len_range: tuple,
+                         seed: int) -> tuple[tuple[int, int], ...]:
+    """Per-request ``(prompt_len, decode_len)`` pairs: replayed traces win
+    over seeded uniform ranges, which win over the homogeneous defaults."""
+    def resolve(replay: tuple, lo_hi: tuple, fixed: int,
+                tag: int, what: str) -> list[int]:
+        if replay:
+            out = [int(replay[i % len(replay)]) for i in range(n)]
+        elif lo_hi:
+            lo, hi = int(lo_hi[0]), int(lo_hi[1])
+            if not 1 <= lo <= hi:
+                raise ValueError(f"{what} range ({lo}, {hi}) must satisfy "
+                                 f"1 <= lo <= hi")
+            # a distinct stream per (seed, field) so lengths don't perturb
+            # the arrival process draws
+            rng = np.random.default_rng([seed, tag])
+            out = [int(v) for v in rng.integers(lo, hi + 1, size=n)]
+        else:
+            out = [int(fixed)] * n
+        if min(out) < 1:
+            raise ValueError(f"{what} lengths must be >= 1, got {min(out)}")
+        return out
+
+    prompts = resolve(prompt_lens, prompt_len_range, seq, 0x9E, "prompt")
+    decodes = resolve(decode_lens, decode_len_range, decode_tokens, 0x51,
+                      "decode")
+    return tuple(zip(prompts, decodes))
+
+
+_request_shapes_cached = switchable_lru_cache(maxsize=64)(_request_shapes_impl)
+
+
 @dataclass(frozen=True)
 class RequestStreamScenario:
     """Serving a request STREAM instead of one analytic batch: requests
@@ -482,6 +524,15 @@ class RequestStreamScenario:
       ``prefill_frac``     prefill/decode pool split (as DisaggServe).
       ``decode_batch``     continuous-batching replica size (as DisaggServe).
 
+    Heterogeneous request lengths: by default every request is ``seq``
+    prompt tokens and ``decode_tokens`` output tokens, but per-request
+    lengths can be drawn from a seeded uniform distribution
+    (``prompt_len_range`` / ``decode_len_range``, inclusive ``(lo, hi)``)
+    or replayed from a trace (``prompt_lens`` / ``decode_lens``, cycled
+    over ``n_requests``).  Each admitted wave is padded to its longest
+    prompt and chains to its longest decode; a request's completion time is
+    its own decode length times the wave's token cadence.
+
     Rewards are streaming metrics: ``objective="goodput"`` maximizes
     requests meeting BOTH SLOs per second; any classic objective applies to
     the p99 end-to-end request latency.  TTFT/TPOT p50/p99 are always in
@@ -496,6 +547,10 @@ class RequestStreamScenario:
     rate_rps: float = 8.0
     arrival_gaps_ms: tuple = ()      # replayable inter-arrival gaps (ms)
     seed: int = 0
+    prompt_len_range: tuple = ()     # (lo, hi) seeded per-request prompt lens
+    decode_len_range: tuple = ()     # (lo, hi) seeded per-request decode lens
+    prompt_lens: tuple = ()          # replayed per-request prompt lens
+    decode_lens: tuple = ()          # replayed per-request decode lens
     max_batch: int = 32              # hard cap on requests per wave
     ttft_slo_ms: float = 4000.0
     tpot_slo_ms: float = 200.0
@@ -528,6 +583,26 @@ class RequestStreamScenario:
         search, so the hot path shouldn't redraw them per evaluation."""
         return _arrivals_cached(self.arrival_gaps_ms, self.n_requests,
                                 self.rate_rps, self.seed)
+
+    def request_shapes(self) -> tuple[tuple[int, int], ...]:
+        """Per-request ``(prompt_len, decode_len)``: deterministic given the
+        scenario fields (replayed traces, seeded ranges, or the homogeneous
+        ``(seq, decode_tokens)`` defaults).  Memoized like the arrivals."""
+        return _request_shapes_cached(
+            self.n_requests, self.seq, self.decode_tokens, self.prompt_lens,
+            self.decode_lens, self.prompt_len_range, self.decode_len_range,
+            self.seed)
+
+    def heterogeneous(self) -> bool:
+        return bool(self.prompt_len_range or self.decode_len_range
+                    or self.prompt_lens or self.decode_lens)
+
+    def _wave_shapes(self, waves: list[tuple[list[int], float]]) -> list[tuple[int, int, int]]:
+        """Per-wave ``(size, seq, decode_tokens)``: each wave pads to its
+        longest admitted prompt and chains to its longest decode."""
+        shapes = self.request_shapes()
+        return [(len(idxs), max(shapes[i][0] for i in idxs),
+                 max(shapes[i][1] for i in idxs)) for idxs, _ in waves]
 
     def form_waves(self, window_ms: float,
                    max_batch: int | None = None) -> list[tuple[list[int], float]]:
@@ -569,9 +644,8 @@ class RequestStreamScenario:
                       par_dec: Parallelism,
                       waves: list[tuple[list[int], float]]) -> Trace:
         return _serving_wave_trace(
-            ctx.spec, par_pre, par_dec, seq=self.seq,
-            decode_tokens=self.decode_tokens,
-            wave_sizes=[len(idxs) for idxs, _ in waves],
+            ctx.spec, par_pre, par_dec,
+            wave_shapes=self._wave_shapes(waves),
             releases_ms=[rel for _, rel in waves],
             max_inflight=int(ctx.config["max_inflight"]),
             meta=dict(arch=ctx.spec.name, scenario=self.name))
@@ -599,12 +673,14 @@ class RequestStreamScenario:
         if not par_pre.valid():
             return _invalid(f"prefill parallelization invalid on "
                             f"{par_pre.n_npus} NPUs")
+        shapes = self.request_shapes()
+        max_seq = max(p for p, _ in shapes)   # == self.seq when homogeneous
         fp_pre = footprint(ctx.spec, par_pre, batch=self.max_batch,
-                           seq=self.seq, mode="inference")
+                           seq=max_seq, mode="inference")
         if fp_pre.total_gb > ctx.capacity_gb:
             return _invalid(f"prefill memory {fp_pre.total_gb:.1f}GB "
                             f"> {ctx.capacity_gb}GB")
-        fp_dec = footprint(ctx.spec, par_dec, batch=resident, seq=self.seq,
+        fp_dec = footprint(ctx.spec, par_dec, batch=resident, seq=max_seq,
                            mode="decode")
         if fp_dec.total_gb > ctx.capacity_gb:
             return _invalid(f"decode memory {fp_dec.total_gb:.1f}GB "
@@ -619,16 +695,22 @@ class RequestStreamScenario:
                        pools={0: pre_pool, 1: dec_pool}, record_finish=True)
 
         arrivals = self.arrivals_ms()
+        wave_shapes = self._wave_shapes(waves)
         ttfts: list[float] = []
         tpots: list[float] = []
         lats: list[float] = []
-        for (idxs, _), (t_first, t_done) in zip(waves,
-                                                _wave_times_ms(tr, res)):
-            tpot = (t_done - t_first) / max(self.decode_tokens - 1, 1)
+        for (idxs, _), (t_first, t_done), (_, _, wave_dec) in zip(
+                waves, _wave_times_ms(tr, res), wave_shapes):
+            tpot = (t_done - t_first) / max(wave_dec - 1, 1)
             for i in idxs:
+                # a request finishes after ITS decode length at the wave's
+                # token cadence (== t_done for the wave's longest request)
+                dec_i = shapes[i][1]
+                done_i = t_done if dec_i == wave_dec \
+                    else t_first + tpot * (dec_i - 1)
                 ttfts.append(t_first - arrivals[i])
                 tpots.append(tpot)
-                lats.append(t_done - arrivals[i])
+                lats.append(done_i - arrivals[i])
         horizon_ms = max(res.latency_ms, arrivals[-1])
         m = stream_metrics(ttfts, tpots, lats, ttft_slo_ms=self.ttft_slo_ms,
                            tpot_slo_ms=self.tpot_slo_ms,
@@ -645,6 +727,11 @@ class RequestStreamScenario:
             "wave_sizes": [len(idxs) for idxs, _ in waves],
             "makespan_ms": res.latency_ms,
             "prefill_gb": fp_pre.total_gb, "decode_gb": fp_dec.total_gb,
+            **({"prompt_len_mean": sum(p for p, _ in shapes) / len(shapes),
+                "prompt_len_max": max_seq,
+                "decode_len_mean": sum(d for _, d in shapes) / len(shapes),
+                "decode_len_max": max(d for _, d in shapes)}
+               if self.heterogeneous() else {}),
             **m.detail(),
         })
 
@@ -784,3 +871,102 @@ class MultiTenantScenario:
             "weighted_goodput_tok_per_ms": goodput,
             "cluster": cluster.describe(),
         })
+
+
+# ---------------------------------------------------------------------------
+# Scenario registry — construct-from-dict front door for StudySpec / CLI
+# ---------------------------------------------------------------------------
+
+SCENARIO_REGISTRY: dict[str, Callable[..., Scenario]] = {}
+
+
+def register_scenario(kind: str, builder: Callable[..., Scenario], *,
+                      replace_existing: bool = False) -> None:
+    """Register a scenario kind.  ``builder(**params)`` must return a
+    ``Scenario``; params arrive JSON-shaped (lists, dicts, scalars)."""
+    if not replace_existing and kind in SCENARIO_REGISTRY:
+        raise ValueError(f"scenario kind {kind!r} already registered")
+    SCENARIO_REGISTRY[kind] = builder
+
+
+def build_scenario(kind: str, params: Mapping[str, Any] | None = None) -> Scenario:
+    """Instantiate a registered scenario kind from JSON-shaped params."""
+    try:
+        builder = SCENARIO_REGISTRY[kind]
+    except KeyError:
+        raise ValueError(f"unknown scenario kind {kind!r}; "
+                         f"known: {sorted(SCENARIO_REGISTRY)}") from None
+    return builder(**dict(params or {}))
+
+
+def list_scenarios() -> dict[str, str]:
+    """kind -> one-line description (the builder's scenario docstring)."""
+    out = {}
+    for kind, builder in SCENARIO_REGISTRY.items():
+        cls = getattr(builder, "scenario_cls", None)
+        doc = (cls.__doc__ or builder.__doc__ or "").strip().splitlines()
+        out[kind] = doc[0] if doc else ""
+    return out
+
+
+def _tuplify(v: Any) -> Any:
+    """JSON arrays -> tuples, recursively (scenario dataclasses use tuples
+    for every sequence field so instances stay frozen/hashable)."""
+    if isinstance(v, (list, tuple)):
+        return tuple(_tuplify(x) for x in v)
+    return v
+
+
+def dataclass_scenario_builder(cls) -> Callable[..., Scenario]:
+    """A construct-from-dict builder for a scenario dataclass: validates
+    parameter names and coerces JSON arrays to the tuples the frozen
+    dataclasses expect."""
+    names = {f.name for f in dataclasses.fields(cls)}
+
+    def build(**params) -> Scenario:
+        unknown = sorted(set(params) - names)
+        if unknown:
+            raise ValueError(
+                f"unknown {cls.__name__} scenario params {unknown}; "
+                f"known: {sorted(names - {'name'})}")
+        return cls(**{k: _tuplify(v) for k, v in params.items()})
+
+    build.scenario_cls = cls
+    return build
+
+
+_multi_tenant_fields = dataclass_scenario_builder(MultiTenantScenario)
+
+
+def _build_multi_tenant(**params) -> MultiTenantScenario:
+    """Multi-tenant builder: resolves ``tenants`` entries given as dicts
+    whose ``arch`` is an ``ARCHS`` registry name (the JSON form), then
+    delegates validation/coercion to the generic dataclass builder."""
+    from repro.configs import ARCHS
+
+    tenants = []
+    for i, t in enumerate(params.pop("tenants", ()) or ()):
+        if isinstance(t, Tenant):
+            tenants.append(t)
+            continue
+        t = dict(t)
+        if "arch" not in t:
+            raise ValueError(f"tenant {i} ({t.get('name', '?')!r}) is "
+                             f"missing 'arch' — an ARCHS registry name")
+        arch = t.pop("arch")
+        if isinstance(arch, str) and arch not in ARCHS:
+            raise ValueError(f"tenant {i} ({t.get('name', '?')!r}) names "
+                             f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+        tenants.append(Tenant(arch=ARCHS[arch] if isinstance(arch, str)
+                              else arch, **t))
+    return _multi_tenant_fields(tenants=tuple(tenants), **params)
+
+
+_build_multi_tenant.scenario_cls = MultiTenantScenario
+
+register_scenario("train", dataclass_scenario_builder(TrainScenario))
+register_scenario("disagg-serve",
+                  dataclass_scenario_builder(DisaggServeScenario))
+register_scenario("request-stream",
+                  dataclass_scenario_builder(RequestStreamScenario))
+register_scenario("multi-tenant", _build_multi_tenant)

@@ -113,14 +113,29 @@ class DesignSpace:
 
     # -- sampling / repair ---------------------------------------------------
     def sample(self, rng: np.random.Generator, max_tries: int = 512) -> dict[str, Any]:
-        """Uniform valid sample: rejection + constraint-aware repair."""
+        """Uniform valid sample: rejection + constraint-aware repair.
+
+        An infeasible (or near-infeasible) space raises with the constraints
+        that kept failing, so a bad PsA restriction — e.g. a StudySpec
+        pinning values no constraint-satisfying config can contain — is
+        debuggable instead of a bare 'could not sample'."""
+        fail_counts: dict[str, int] = {}
         for _ in range(max_tries):
             vec = [int(rng.integers(len(g.choices))) for g in self.genes]
             config = self.decode(vec)
             config = self.repair(config, rng)
-            if self.is_valid(config):
+            violated = self.violations(config)
+            if not violated:
                 return config
-        raise RuntimeError(f"could not sample a valid config for {self.pset.name}")
+            for v in violated:
+                fail_counts[v] = fail_counts.get(v, 0) + 1
+        worst = sorted(fail_counts.items(), key=lambda kv: -kv[1])
+        detail = "; ".join(f"{name} (violated in {n}/{max_tries} tries)"
+                           for name, n in worst[:4])
+        raise RuntimeError(
+            f"could not sample a valid config for {self.pset.name} in "
+            f"{max_tries} tries — persistent constraint violations: {detail}."
+            f" Check the fixed/pinned values against these constraints.")
 
     def repair(self, config: dict[str, Any], rng: np.random.Generator,
                max_tries: int = 64) -> dict[str, Any]:

@@ -1,0 +1,120 @@
+"""``python -m repro.dse`` — the Study CLI.
+
+    python -m repro.dse run study.json [--out results.jsonl] [--resume]
+    python -m repro.dse list-scenarios
+    python -m repro.dse list-systems
+    python -m repro.dse list-objectives
+
+``run`` executes a serialized ``StudySpec`` as one campaign (shared
+eval_store + process pool across the (agent x seed) grid), streaming
+per-cell results to a JSONL file next to the spec; ``--resume`` finishes a
+half-done campaign without re-evaluating completed cells.  The ``list-*``
+commands enumerate the registries a spec's names resolve through.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+from pathlib import Path
+
+
+def _cmd_run(args: argparse.Namespace) -> int:
+    from repro.core.study import StudySpec, run_study
+
+    say = (lambda s: None) if args.quiet else print
+    try:
+        spec = StudySpec.from_json(Path(args.spec))
+        if args.steps is not None or args.workers is not None:
+            # a --steps override changes the spec (and its hash): a resumed
+            # run must use the same override as the original.  --workers
+            # only changes evaluation parallelism and is hash-exempt.
+            spec = dataclasses.replace(
+                spec,
+                steps=args.steps if args.steps is not None else spec.steps,
+                workers=args.workers if args.workers is not None
+                else spec.workers)
+        say(f"study {spec.name!r} [{spec.spec_hash()}]: "
+            f"{spec.arch} on {spec.system}, scenario={spec.scenario}, "
+            f"objective={spec.objective}, "
+            f"{len(spec.agents)} agent(s) x {len(spec.seeds)} seed(s)")
+        out = Path(args.out) if args.out else \
+            Path(args.spec).with_suffix(".results.jsonl")
+        res = run_study(spec, out=out, resume=args.resume, log=say)
+    except (ValueError, OSError) as e:
+        # ValueError covers spec validation + resume refusals + bad JSON
+        # (json.JSONDecodeError subclasses it); OSError covers missing files
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    best = res.best()
+    if best is not None:
+        say(f"best cell {best.cell_id}: reward={best.result.best_reward:.6g}"
+            f" latency_ms={best.result.best_latency_ms:.1f}")
+    # the stable machine-readable trailer (CI greps cells_run on resume)
+    print(f"campaign done: cells_run={res.cells_run} "
+          f"cells_skipped={res.cells_skipped} store_hits={res.store_hits} "
+          f"store_misses={res.store_misses} "
+          f"distinct_points={res.distinct_points} "
+          f"wall_s={res.wall_s:.1f} results={res.out}")
+    return 0
+
+
+def _cmd_list_scenarios(args: argparse.Namespace) -> int:
+    from repro.core.scenario import list_scenarios
+
+    for kind, doc in sorted(list_scenarios().items()):
+        print(f"{kind:16s} {doc}")
+    return 0
+
+
+def _cmd_list_systems(args: argparse.Namespace) -> int:
+    from repro.core.systems import list_systems
+
+    for name, p in sorted(list_systems().items()):
+        print(f"{name:10s} n_npus={p.n_npus:<5d} device={p.device.name:18s} "
+              f"{p.doc}")
+    return 0
+
+
+def _cmd_list_objectives(args: argparse.Namespace) -> int:
+    from repro.core.rewards import list_objectives
+
+    for name, obj in sorted(list_objectives().items()):
+        kind = "stream" if obj.streaming else "scalar"
+        print(f"{name:18s} [{kind}] {obj.doc}")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.dse",
+        description="Run serialized DSE studies and inspect the registries "
+                    "their names resolve through.")
+    sub = ap.add_subparsers(dest="command", required=True)
+
+    run_p = sub.add_parser("run", help="execute a StudySpec JSON file")
+    run_p.add_argument("spec", help="path to the study .json")
+    run_p.add_argument("--out", default=None,
+                       help="results JSONL path (default: <spec>.results.jsonl)")
+    run_p.add_argument("--resume", action="store_true",
+                       help="skip cells already in the results file")
+    run_p.add_argument("--steps", type=int, default=None,
+                       help="override the spec's step budget")
+    run_p.add_argument("--workers", type=int, default=None,
+                       help="override the spec's process-pool size")
+    run_p.add_argument("--quiet", action="store_true",
+                       help="only print the final campaign trailer")
+    run_p.set_defaults(fn=_cmd_run)
+
+    sub.add_parser("list-scenarios",
+                   help="registered scenario kinds").set_defaults(
+        fn=_cmd_list_scenarios)
+    sub.add_parser("list-systems",
+                   help="registered system presets").set_defaults(
+        fn=_cmd_list_systems)
+    sub.add_parser("list-objectives",
+                   help="registered objectives").set_defaults(
+        fn=_cmd_list_objectives)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)

@@ -67,3 +67,61 @@ def test_predicate_constraint():
     for s in range(20):
         cfg = ds.sample(np.random.default_rng(s))
         assert cfg["a"] >= cfg["b"]
+
+
+def test_pow2_range_validates_bounds():
+    """Non-power-of-two bounds used to be silently truncated (1..1000 ->
+    ..512); now they raise with the nearest powers named."""
+    assert pow2_range(1, 1024) == tuple(2 ** i for i in range(11))
+    assert pow2_range(4, 4) == (4,)
+    with pytest.raises(ValueError, match="not a power of two"):
+        pow2_range(1, 1000)
+    with pytest.raises(ValueError, match="512 and 1024"):
+        pow2_range(1, 1000)
+    with pytest.raises(ValueError, match="not a power of two"):
+        pow2_range(3, 8)
+    with pytest.raises(ValueError, match="lo=16 > hi=8"):
+        pow2_range(16, 8)
+    with pytest.raises(ValueError, match="positive"):
+        pow2_range(0, 8)
+
+
+def test_sample_reports_persistent_violations():
+    """An infeasible space names the failing constraints instead of a bare
+    'could not sample' (satellite: infeasibility diagnostics)."""
+    ps = ParameterSet(
+        params=[Parameter("a", "workload", (2, 4)),
+                Parameter("b", "workload", (2, 4))],
+        constraints=[Constraint("product_eq", ("a", "b"), 7,
+                                name="product(a,b) == 7")])
+    ds = DesignSpace(ps)
+    with pytest.raises(RuntimeError, match=r"product\(a,b\) == 7"):
+        ds.sample(np.random.default_rng(0), max_tries=16)
+    with pytest.raises(RuntimeError, match="16/16 tries"):
+        ds.sample(np.random.default_rng(0), max_tries=16)
+
+
+def test_pin_fixes_parameters():
+    ps = paper_psa(1024)
+    pinned = ps.pin({"chunks": 4, "sched_policy": "lifo",
+                     "coll_algo": ["ring", "rhd", "ring", "dbt"]})
+    ds = DesignSpace(pinned)
+    assert "chunks" not in {g.param for g in ds.genes}
+    cfg = ds.sample(np.random.default_rng(0))
+    assert cfg["chunks"] == 4 and cfg["sched_policy"] == "lifo"
+    assert cfg["coll_algo"] == ("ring", "rhd", "ring", "dbt")  # list coerced
+    with pytest.raises(ValueError, match="unknown pinned parameter"):
+        ps.pin({"not_a_param": 1})
+
+
+def test_pin_rejects_out_of_domain_values():
+    """A typo'd pin must not silently search outside the design space."""
+    ps = paper_psa(1024)
+    with pytest.raises(ValueError, match="outside the parameter's choices"):
+        ps.pin({"chunks": 3})
+    with pytest.raises(ValueError, match="outside the parameter's choices"):
+        ps.pin({"sched_policy": "fifoo"})
+    with pytest.raises(ValueError, match="4 values"):
+        ps.pin({"coll_algo": ("ring", "ring")})          # wrong arity
+    with pytest.raises(ValueError, match="4 values"):
+        ps.pin({"coll_algo": ("ring", "ring", "ring", "rang")})
