@@ -28,10 +28,11 @@ SYSTEMS: dict[str, tuple[int, Device]] = {
 def make_env(arch: str, system: str, *, batch: int = 1024, seq: int | None = None,
              objective: str = "perf_per_bw", mode: str = "train",
              scenario=None, eval_store: dict | None = None,
-             decode_tokens: int = 64) -> CosmicEnv:
+             decode_tokens: int = 64, backend: str = "reference") -> CosmicEnv:
     return system_env(arch, system, batch=batch, seq=seq,
                       objective=objective, mode=mode, scenario=scenario,
-                      eval_store=eval_store, decode_tokens=decode_tokens)
+                      eval_store=eval_store, decode_tokens=decode_tokens,
+                      backend=backend)
 
 
 def make_pset(system: str, *, stacks: set[str] | None = None, max_pp: int = 4) -> ParameterSet:

@@ -11,6 +11,8 @@ from __future__ import annotations
 
 import time
 
+import numpy as np
+
 from benchmarks.common import STEPS, emit, make_env, make_pset
 from repro.core import cache
 from repro.core.dse import run_search
@@ -39,6 +41,53 @@ def dse_throughput(steps: int = 500, arch: str = "gpt3-13b") -> tuple[float, flo
     finally:
         cache.set_caches_enabled(was_enabled)
     return seq, batched
+
+
+def backend_throughput(points: int = 32) -> "tuple[float, float] | None":
+    """(reference, jax) points/sec evaluating one agent population of
+    collective/network stacks over a LARGE pipelined request-stream trace —
+    the acceptance measurement for the backend API.  Both paths run through
+    ``CosmicEnv.step_batch`` (the PR-1 batched engine); the jax row swaps
+    the per-point heapq event loop for one shared-plan ``simulate_batch``
+    sweep.  None when jax is unavailable."""
+    from repro.core.backends import backend_available
+    from repro.core.scenario import RequestStreamScenario
+
+    if not backend_available("jax"):
+        return None
+    # 256 Poisson requests through disaggregated pools -> a ~26k-op
+    # pipelined multi-wave trace; trace-shaping knobs are pinned so the
+    # whole population shares ONE scheduling plan
+    scenario = RequestStreamScenario(n_requests=256, seq=2048,
+                                     decode_tokens=64, rate_rps=32.0, seed=0)
+    pinned = dict(dp=8, sp=1, pp=1, weight_sharded=0,
+                  topology=("ring", "fc", "ring", "switch"),
+                  npus_per_dim=(4, 8, 4, 8),
+                  prefill_frac=0.5, decode_batch=8, batch_window_ms=50.0,
+                  max_inflight=2)
+    rng = np.random.default_rng(0)
+    algos = ("ring", "direct", "rhd", "dbt")
+    cfgs = []
+    for _ in range(points):
+        cfgs.append(dict(
+            pinned,
+            coll_algo=tuple(rng.choice(algos) for _ in range(4)),
+            chunks=int(rng.choice((2, 4, 8, 16))),
+            sched_policy=str(rng.choice(("fifo", "lifo"))),
+            multidim_coll=str(rng.choice(("baseline", "blueconnect"))),
+            bw_per_dim=tuple(int(b) for b in
+                             rng.choice(range(50, 501, 50), size=4))))
+    rates = []
+    for backend in ("reference", "jax"):
+        env = make_env("qwen2-1.5b", "system2", scenario=scenario,
+                       objective="goodput", backend=backend)
+        # warm trace caches + compile the sweep at the population shape
+        env.step_batch(cfgs)
+        env.clear_memo()
+        t0 = time.time()
+        env.step_batch(cfgs)
+        rates.append(len(cfgs) / (time.time() - t0))
+    return rates[0], rates[1]
 
 
 def agents_study(steps: int) -> StudySpec:
@@ -77,6 +126,11 @@ def run(steps: int | None = None) -> list[tuple]:
     rows.append(("dse_throughput", 0.0,
                  f"seq_pts_per_s={seq:.0f} batched_pts_per_s={batched:.0f} "
                  f"speedup=x{batched / max(seq, 1e-9):.2f}"))
+    bt = backend_throughput()
+    rows.append(("backend_throughput", 0.0,
+                 "jax_unavailable" if bt is None else
+                 f"ref_pts_per_s={bt[0]:.1f} jax_pts_per_s={bt[1]:.1f} "
+                 f"speedup=x{bt[1] / max(bt[0], 1e-9):.2f}"))
     return rows
 
 

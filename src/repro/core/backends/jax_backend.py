@@ -1,0 +1,173 @@
+"""JaxBackend: a jit+vmap-compiled levelized sweep over the dependency DAG.
+
+The reference event loop is inherently sequential per design point.  This
+backend lowers the shared ``_SimPlan`` into a fixed-structure longest-path
+sweep that XLA compiles once per trace shape and ``vmap`` evaluates for a
+whole agent population in a single call.
+
+The lowering: under an issue-order schedule, each resource runs its ops in
+uid order (a topological order by the ``TraceBuilder``/
+``compose_request_waves`` contract), so ``free[resource]`` at op *i* is
+exactly the finish time of the previous op on *i*'s resource.  That turns
+the whole schedule into a max-plus longest-path recurrence over the DAG
+augmented with per-resource chain edges::
+
+    finish[i] = dur[i] + max(finish[j] for j in deps[i] + {prev_on_res[i]})
+
+The augmented-parent table is static per trace (built once, piggybacked on
+the plan); the per-design-point durations (vectorized roofline + memoized
+collective model, shared with the reference backend via
+``simulator.plan_durations``) are the ONLY population-varying input, so the
+compiled sweep is reused across every design point of the search.
+
+Fidelity: each resource serializes its ops in issue order instead of the
+reference loop's arrival-order (FIFO) / freshest-first (LIFO) queue
+discipline, so makespans can deviate where a resource's queue reorders —
+parity tests pin the tolerance (exact on every trace family shipped:
+per-resource ready order follows issue order there).  Use the reference
+backend when bit-exact schedules matter; use this one to sweep large
+populations over large traces.
+"""
+from __future__ import annotations
+
+from collections.abc import Mapping
+from typing import Any, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.simulator import (SimResult, SystemConfig, _SimPlan,
+                                  build_sim_result, plan_durations)
+from repro.core.workload import Parallelism, Trace
+
+
+@jax.jit
+def _sweep_population(dur_t: jnp.ndarray,
+                      parents_pad: jnp.ndarray) -> jnp.ndarray:
+    """Finish time of every op for every population member.
+
+    ``dur_t`` is (n_ops, P) — population on the trailing axis so the
+    vmapped carry writes whole contiguous rows; ``parents_pad`` (n_ops, D)
+    holds each op's augmented parents (deps + same-resource predecessor)
+    padded with ``n_ops``, a dummy slot pinned to finish 0.  Returns
+    (n_ops + 1, P) finish times (the dummy row last)."""
+    n_ops = dur_t.shape[0]
+
+    def one(d: jnp.ndarray) -> jnp.ndarray:
+        def body(i, finish):
+            fin = finish[parents_pad[i]].max() + d[i]
+            return finish.at[i].set(fin)
+
+        return lax.fori_loop(0, n_ops, body, jnp.zeros(n_ops + 1, d.dtype))
+
+    return jax.vmap(one, in_axes=1, out_axes=1)(dur_t)
+
+
+def _plan_parents(trace: Trace, plan: _SimPlan) -> np.ndarray:
+    """The plan's augmented-parent table, built once and piggybacked on the
+    plan (plans are piggybacked on cached immutable traces)."""
+    cached = getattr(plan, "_jax_parents", None)
+    if cached is not None:
+        return cached
+    n = plan.n_ops
+    last_on_res: dict[int, int] = {}
+    rows: list[list[int]] = []
+    for op in trace.ops:
+        if any(d >= op.uid for d in op.deps):
+            # the sweep reads parents' finish times in uid order; a forward
+            # dep would silently read 0 where the reference loop deadlocks
+            raise ValueError(f"op {op.uid} depends on a later op — the jax "
+                             f"backend needs topologically-ordered uids "
+                             f"(TraceBuilder/compose_request_waves traces)")
+        r = plan.res_of[op.uid]
+        row = list(op.deps)
+        prev = last_on_res.get(r)
+        if prev is not None:
+            row.append(prev)
+        last_on_res[r] = op.uid
+        rows.append(row)
+    width = max((len(row) for row in rows), default=0)
+    parents = np.full((n, max(width, 1)), n, dtype=np.int32)
+    for i, row in enumerate(rows):
+        parents[i, :len(row)] = row
+    plan._jax_parents = parents
+    return parents
+
+
+def _x64():
+    """Double-precision tracing scoped to this backend's sweeps (the global
+    default stays untouched for the pallas/kernel code paths)."""
+    return jax.experimental.enable_x64()
+
+
+class FinishTimes(Mapping):
+    """``SimResult.op_finish_us`` backed by the sweep's finish row — dict
+    semantics (uid -> finish time) without materializing tens of thousands
+    of boxed floats per design point; scenarios only read the wave-mark
+    uids off it."""
+
+    __slots__ = ("_row",)
+
+    def __init__(self, row: np.ndarray) -> None:
+        self._row = row
+
+    def __getitem__(self, uid: int) -> float:
+        # dict semantics, not array semantics: unknown uids must raise
+        # KeyError (so `in`/`.get()` work) and never wrap negatively
+        if not 0 <= uid < len(self._row):
+            raise KeyError(uid)
+        return float(self._row[uid])
+
+    def __len__(self) -> int:
+        return len(self._row)
+
+    def __iter__(self):
+        return iter(range(len(self._row)))
+
+
+class JaxBackend:
+    """Population-vectorized scheduling on the XLA-compiled levelized sweep."""
+
+    name = "jax"
+    vectorized = True
+
+    def simulate(self, trace: Trace, cfg: SystemConfig, par: Parallelism, *,
+                 pools: dict[int, Any] | None = None,
+                 record_per_op: bool = False,
+                 record_finish: bool = False) -> SimResult:
+        from repro.core.backends.base import SimCall
+
+        return self.simulate_batch(
+            trace, [SimCall(trace, cfg, par, pools=pools,
+                            record_per_op=record_per_op,
+                            record_finish=record_finish)])[0]
+
+    def simulate_batch(self, trace: Trace,
+                       calls: Sequence[Any]) -> list[SimResult]:
+        if not calls:
+            return []
+        plans_durs = [plan_durations(trace, c.cfg, c.par, c.pools)
+                      for c in calls]
+        plan = plans_durs[0][0]
+        parents = _plan_parents(trace, plan)
+        dur = np.asarray([d for _, d in plans_durs], dtype=np.float64)
+        with _x64():
+            finish = np.asarray(_sweep_population(
+                jnp.asarray(dur.T), jnp.asarray(parents)))[:plan.n_ops].T
+        makespan = finish.max(axis=1) if plan.n_ops else np.zeros(len(calls))
+        res_of = np.asarray(plan.res_of, dtype=np.intp)
+        n_res = len(plan.res_names)
+        out: list[SimResult] = []
+        for k, call in enumerate(calls):
+            busy = np.bincount(res_of, weights=dur[k], minlength=n_res)
+            fin: Mapping = {}
+            if call.record_per_op or call.record_finish:
+                fin = FinishTimes(finish[k])
+            out.append(build_sim_result(
+                plan, makespan=float(makespan[k]), busy=busy.tolist(),
+                dur=dur[k], finish=fin,
+                record_per_op=call.record_per_op))
+        return out

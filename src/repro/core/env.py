@@ -10,7 +10,11 @@ Batched evaluation: ``step_batch`` evaluates a population of configurations
 at once, deduplicating repeated design points through a per-env evaluation
 memo (evaluation is a pure function of the config) and optionally fanning
 the distinct points out to a ``concurrent.futures`` process pool.  Results
-are identical to serial ``step`` calls in the same order.
+are identical to serial ``step`` calls in the same order.  With a
+vectorized simulation backend (``backend="jax"``), the surviving unique
+points are instead described as declarative ``SimJob``s and swept through
+the backend's population-batched ``simulate_batch``, grouped by shared
+trace.
 
 Cross-search sharing: pass the same ``eval_store`` dict to several envs
 over the same (spec, scenario, system) and they share one evaluation memo —
@@ -29,6 +33,7 @@ from dataclasses import dataclass, field, replace
 from typing import Any, Sequence
 
 from repro.configs.base import ArchSpec
+from repro.core.backends import BACKEND_REGISTRY, get_backend, run_sim_jobs
 from repro.core.cache import cache_epoch, caches_enabled
 from repro.core.compute import Device
 from repro.core.rewards import Evaluation, Objective, get_objective
@@ -101,10 +106,20 @@ class CosmicEnv:
     objective: "str | Objective" = "perf_per_bw"
     capacity_gb: float = 24.0
     fixed_network: Network | None = None   # for workload/collective-only DSE
+    # simulation-backend registry name (``repro.core.backends``): how every
+    # design point's traces are scheduled.  Vectorized backends ("jax")
+    # additionally reroute ``step_batch`` through the population-batched
+    # ``simulate_batch`` path.  Kept a string so envs pickle to pool workers.
+    backend: str = "reference"
     # optional cross-search shared memo (see module docstring)
     eval_store: dict[tuple, Evaluation] | None = None
     store_hits: int = 0
     store_misses: int = 0
+    # optional observer of fresh evaluations: called (config, Evaluation)
+    # once per memo miss (the persistent cross-campaign eval store hooks in
+    # here).  Not forwarded to pool workers — the parent records results as
+    # they come back.
+    eval_record: Any = None
     history: list[StepRecord] = field(default_factory=list)
     _eval_cache: dict[tuple, Evaluation] = field(default_factory=dict, repr=False)
     _sig_cache: tuple | None = field(default=None, repr=False)
@@ -127,6 +142,9 @@ class CosmicEnv:
                 f"scenario (per-request metrics); "
                 f"{type(self.scenario).__name__} only supports scalar "
                 f"(one-latency) objectives")
+        if self.backend not in BACKEND_REGISTRY:
+            raise ValueError(f"unknown simulation backend {self.backend!r}; "
+                             f"known: {sorted(BACKEND_REGISTRY)}")
         if self.scenario is None:
             if self.objective.streaming:
                 raise ValueError(f"objective {self.objective.name!r} needs a "
@@ -161,7 +179,7 @@ class CosmicEnv:
         return EnvContext(spec=self.spec, n_npus=self.n_npus,
                           device=self.device, objective=self.objective,
                           capacity_gb=self.capacity_gb, config=config,
-                          network=net, sys_cfg=sys_cfg)
+                          network=net, sys_cfg=sys_cfg, backend=self.backend)
 
     def evaluate_config(self, config: dict[str, Any]) -> Evaluation:
         """Pure evaluation of one design point (no history, no memo)."""
@@ -183,10 +201,14 @@ class CosmicEnv:
     def _store_sig(self) -> tuple:
         if self._sig_cache is None:  # all inputs are frozen value objects
             # hash the full spec/device (not just names): same-named but
-            # differing objects must not share store entries
+            # differing objects must not share store entries.  The backend
+            # is part of the signature — a vectorized backend's results may
+            # differ (within tolerance) from the reference oracle's, so
+            # they must not cross-hit through a shared store.
             self._sig_cache = (self.spec, self.n_npus, self.device,
                                self.objective, self.capacity_gb,
-                               self.scenario, self.fixed_network)
+                               self.scenario, self.fixed_network,
+                               self.backend)
         return self._sig_cache
 
     def _point_key(self, config: dict[str, Any]) -> tuple:
@@ -215,6 +237,8 @@ class CosmicEnv:
             self.store_misses += self.eval_store is not None
             ev = self.evaluate_config(config)
             memo[key] = ev
+            if self.eval_record is not None:
+                self.eval_record(config, ev)
         else:
             self.store_hits += self.eval_store is not None
         return ev
@@ -258,6 +282,9 @@ class CosmicEnv:
             if todo:
                 evs = self._eval_many(list(todo.values()), workers)
                 memo.update(zip(todo.keys(), evs))
+                if self.eval_record is not None:
+                    for cfg, ev in zip(todo.values(), evs):
+                        self.eval_record(cfg, ev)
             out = [memo[key] for key in keys]
         else:
             # caches off = the honest uncached baseline: every occurrence
@@ -270,6 +297,17 @@ class CosmicEnv:
 
     def _eval_many(self, cfgs: list[dict[str, Any]],
                    workers: int) -> list[Evaluation]:
+        backend = get_backend(self.backend)
+        if backend.vectorized and len(cfgs) > 1 \
+                and hasattr(self.scenario, "sim_job"):
+            # population-vectorized path: describe every point's simulator
+            # calls declaratively, then sweep the calls sharing a trace —
+            # and therefore a scheduling plan — in one simulate_batch each.
+            # Takes precedence over the process pool: fanning single-point
+            # evaluations out to workers would forfeit the shared-plan
+            # sweep (and pay a per-worker jit compile).
+            jobs = [self.scenario.sim_job(self.context(c)) for c in cfgs]
+            return run_sim_jobs(jobs, backend)
         if workers > 1 and len(cfgs) > 1:
             pool = self._get_executor(workers)
             chunk = max(1, len(cfgs) // (self._executor_workers * 2))
@@ -293,7 +331,7 @@ class CosmicEnv:
         if self._executor is None:
             bare = replace(self, history=[], _eval_cache={}, _executor=None,
                            _executor_workers=0, eval_store=None,
-                           store_hits=0, store_misses=0)
+                           store_hits=0, store_misses=0, eval_record=None)
             # fork gives near-free workers, but inherits other threads' locks
             # mid-held — unsafe once a threaded runtime (jax) is loaded, so
             # fall back to spawn there (slower startup, re-imports per worker)

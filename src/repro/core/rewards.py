@@ -19,8 +19,9 @@ from typing import Any, Callable
 import numpy as np
 
 from repro.configs.base import ArchSpec
+from repro.core.backends import SimCall, SimJob, run_sim_job
 from repro.core.memory import footprint
-from repro.core.simulator import SimResult, SystemConfig, simulate
+from repro.core.simulator import SimResult, SystemConfig
 from repro.core.topology import Network
 from repro.core.workload import Parallelism, Trace, generate_trace
 
@@ -234,11 +235,15 @@ register_objective(Objective(
 STREAM_OBJECTIVES = tuple(n for n, o in OBJECTIVES.items() if o.streaming)
 
 
-def evaluate(spec: ArchSpec, par: Parallelism, cfg: SystemConfig, *,
-             batch: int, seq: int, mode: str = "train",
-             objective: "str | Objective" = "perf_per_bw",
-             capacity_gb: float = 24.0, decode_tokens: int = 64) -> Evaluation:
-    """Full paper pipeline: WTG -> simulate -> reward (+ memory gate)."""
+def evaluate_job(spec: ArchSpec, par: Parallelism, cfg: SystemConfig, *,
+                 batch: int, seq: int, mode: str = "train",
+                 objective: "str | Objective" = "perf_per_bw",
+                 capacity_gb: float = 24.0,
+                 decode_tokens: int = 64) -> "SimJob | Evaluation":
+    """The paper pipeline as a declarative ``SimJob``: validity/memory gates
+    resolve immediately to an ``Evaluation``; surviving points return the
+    simulator calls plus the reward-finalization closure, executable on any
+    simulation backend (and batchable across an agent population)."""
     obj = get_objective(objective)
     if not par.valid():
         return Evaluation(0.0, float("inf"), False, {"why": "parallelization invalid"})
@@ -248,22 +253,45 @@ def evaluate(spec: ArchSpec, par: Parallelism, cfg: SystemConfig, *,
                           {"why": f"memory {fp.total_gb:.1f}GB > {capacity_gb}GB"})
     if mode == "serve":
         # prefill the prompt once + decode `decode_tokens` new tokens
-        pre = simulate(generate_trace(spec, par, batch=batch, seq=seq,
-                                      mode="inference"), cfg, par)
-        dec = simulate(generate_trace(spec, par, batch=batch, seq=seq,
-                                      mode="decode"), cfg, par)
-        latency_ms = pre.latency_ms + decode_tokens * dec.latency_ms
-        r = obj.scalar(latency_ms, cfg.network)
-        return Evaluation(r, latency_ms, True, {
-            "footprint_gb": fp.total_gb,
-            "prefill_ms": pre.latency_ms, "decode_ms": dec.latency_ms,
-        })
+        pre_tr = generate_trace(spec, par, batch=batch, seq=seq,
+                                mode="inference")
+        dec_tr = generate_trace(spec, par, batch=batch, seq=seq,
+                                mode="decode")
+
+        def fin_serve(results: list[SimResult]) -> Evaluation:
+            pre, dec = results
+            latency_ms = pre.latency_ms + decode_tokens * dec.latency_ms
+            r = obj.scalar(latency_ms, cfg.network)
+            return Evaluation(r, latency_ms, True, {
+                "footprint_gb": fp.total_gb,
+                "prefill_ms": pre.latency_ms, "decode_ms": dec.latency_ms,
+            })
+
+        return SimJob((SimCall(pre_tr, cfg, par), SimCall(dec_tr, cfg, par)),
+                      fin_serve)
     trace = generate_trace(spec, par, batch=batch, seq=seq, mode=mode)
-    res = simulate(trace, cfg, par)
-    r = obj.scalar(res.latency_ms, cfg.network)
-    return Evaluation(r, res.latency_ms, True, {
-        "footprint_gb": fp.total_gb,
-        "exposed_comm_us": res.exposed_comm_us,
-        "compute_busy_us": res.compute_busy_us,
-        "comm_busy_us": res.comm_busy_us,
-    })
+
+    def fin(results: list[SimResult]) -> Evaluation:
+        res = results[0]
+        r = obj.scalar(res.latency_ms, cfg.network)
+        return Evaluation(r, res.latency_ms, True, {
+            "footprint_gb": fp.total_gb,
+            "exposed_comm_us": res.exposed_comm_us,
+            "compute_busy_us": res.compute_busy_us,
+            "comm_busy_us": res.comm_busy_us,
+        })
+
+    return SimJob((SimCall(trace, cfg, par),), fin)
+
+
+def evaluate(spec: ArchSpec, par: Parallelism, cfg: SystemConfig, *,
+             batch: int, seq: int, mode: str = "train",
+             objective: "str | Objective" = "perf_per_bw",
+             capacity_gb: float = 24.0, decode_tokens: int = 64,
+             backend: "str | None" = None) -> Evaluation:
+    """Full paper pipeline: WTG -> simulate -> reward (+ memory gate), on
+    the selected simulation backend (default: reference)."""
+    return run_sim_job(
+        evaluate_job(spec, par, cfg, batch=batch, seq=seq, mode=mode,
+                     objective=objective, capacity_gb=capacity_gb,
+                     decode_tokens=decode_tokens), backend)

@@ -45,13 +45,14 @@ from typing import (Any, Callable, ClassVar, Mapping, Protocol,
 import numpy as np
 
 from repro.configs.base import ArchSpec
+from repro.core.backends import SimCall, SimJob, run_sim_job
 from repro.core.cache import switchable_lru_cache
 from repro.core.compute import DEVICES, Device
 from repro.core.memory import footprint, kv_cache_bytes
 from repro.core.psa import Constraint, Parameter, ParameterSet
-from repro.core.rewards import (Evaluation, Objective, evaluate,
+from repro.core.rewards import (Evaluation, Objective, evaluate_job,
                                 slo_attainment, stream_metrics, stream_reward)
-from repro.core.simulator import SimResult, SystemConfig, simulate
+from repro.core.simulator import SimResult, SystemConfig
 from repro.core.topology import (Cluster, Network, partition_cluster,
                                  sub_network, sub_network_indexed)
 from repro.core.workload import (Parallelism, Trace, Wave, WaveSegment,
@@ -63,7 +64,10 @@ from repro.core.workload import (Parallelism, Trace, Wave, WaveSegment,
 class EnvContext:
     """Everything the env resolves before handing a design point to its
     scenario: the fixed system description plus the per-point config and the
-    network/system stacks built from it."""
+    network/system stacks built from it.  ``backend`` selects the simulation
+    backend (``repro.core.backends``) the scenario's ``SimJob`` runs on —
+    a registry name (kept a string so envs stay picklable for the process
+    pool); ``None`` means the reference event loop."""
     spec: ArchSpec
     n_npus: int
     device: Device
@@ -72,6 +76,7 @@ class EnvContext:
     config: Mapping[str, Any]
     network: Network
     sys_cfg: SystemConfig
+    backend: Any = None
 
     def parallelism(self, n_npus: int | None = None) -> Parallelism:
         """The config's workload-stack knobs resolved against a pool size."""
@@ -89,7 +94,16 @@ class EnvContext:
 @runtime_checkable
 class Scenario(Protocol):
     """Structural protocol — any frozen, picklable object with these methods
-    can drive ``CosmicEnv`` (process-pool workers receive a copy)."""
+    can drive ``CosmicEnv`` (process-pool workers receive a copy).
+
+    Optional capability: ``sim_job(ctx) -> SimJob | Evaluation`` describes
+    the design point's simulator calls declaratively (see
+    ``repro.core.backends``).  Scenarios that provide it get population-
+    vectorized evaluation for free — ``CosmicEnv.step_batch`` hands the
+    surviving unique configs of a batch to the backend's ``simulate_batch``
+    (grouped by shared trace) instead of looping ``evaluate``.  All four
+    built-ins implement it; ``evaluate`` is then just ``run_sim_job(
+    self.sim_job(ctx), ctx.backend)``."""
 
     name: str
 
@@ -146,11 +160,15 @@ class TrainScenario:
         return {self.mode: generate_trace(ctx.spec, par, batch=self.batch,
                                           seq=self.seq, mode=self.mode)}
 
+    def sim_job(self, ctx: EnvContext) -> "SimJob | Evaluation":
+        return evaluate_job(ctx.spec, ctx.parallelism(), ctx.sys_cfg,
+                            batch=self.batch, seq=self.seq, mode=self.mode,
+                            objective=ctx.objective,
+                            capacity_gb=ctx.capacity_gb,
+                            decode_tokens=self.decode_tokens)
+
     def evaluate(self, ctx: EnvContext) -> Evaluation:
-        return evaluate(ctx.spec, ctx.parallelism(), ctx.sys_cfg,
-                        batch=self.batch, seq=self.seq, mode=self.mode,
-                        objective=ctx.objective, capacity_gb=ctx.capacity_gb,
-                        decode_tokens=self.decode_tokens)
+        return run_sim_job(self.sim_job(ctx), ctx.backend)
 
 
 # ---------------------------------------------------------------------------
@@ -378,16 +396,22 @@ class DisaggServeScenario:
         total = kv_cache_bytes(ctx.spec, batch=self.batch, seq=self.seq)
         return total / max(1, min(n_pre, n_dec))
 
-    def evaluate(self, ctx: EnvContext) -> Evaluation:
+    def sim_job(self, ctx: EnvContext) -> "SimJob | Evaluation":
         frac = float(ctx.config["prefill_frac"])
         if frac >= 1.0:
             # degenerate: one pool serves both phases (the monolithic path)
-            ev = TrainScenario(self.batch, self.seq, "serve",
-                               self.decode_tokens).evaluate(ctx)
-            if ev.valid:
-                ev = replace(ev, detail=dict(ev.detail, scenario=self.name,
-                                             monolithic=True))
-            return ev
+            def mono(ev: Evaluation) -> Evaluation:
+                if ev.valid:
+                    ev = replace(ev, detail=dict(ev.detail,
+                                                 scenario=self.name,
+                                                 monolithic=True))
+                return ev
+
+            inner = TrainScenario(self.batch, self.seq, "serve",
+                                  self.decode_tokens).sim_job(ctx)
+            if not isinstance(inner, SimJob):
+                return mono(inner)
+            return SimJob(inner.calls, lambda rs: mono(inner.finalize(rs)))
         decode_batch = int(ctx.config["decode_batch"])
         n_pre, n_dec = self._pools(ctx)
         if n_pre < 1 or n_dec < 1:
@@ -422,28 +446,42 @@ class DisaggServeScenario:
         }
         if self.pipelined:
             tr = self._pipelined_trace(ctx, par_pre, par_dec, waves, resident)
-            res = simulate(tr, ctx.sys_cfg, par_pre,
-                           pools={0: pre_pool, 1: dec_pool},
-                           record_finish=True)
-            t_first, t_done = _wave_times_ms(tr, res)[0]
-            latency_ms = res.latency_ms
-            detail.update(
-                ttft_ms=t_first,
-                p50_token_latency_ms=(t_done - t_first)
-                / max(self.decode_tokens - 1, 1))
-        else:
-            _, dec_tr, combined = self._phase_traces(ctx, par_pre, par_dec,
-                                                     resident)
-            first = simulate(combined, ctx.sys_cfg, par_pre,
-                             pools={0: pre_pool, 1: dec_pool})
-            step = simulate(dec_tr, ctx.sys_cfg, par_dec,
-                            pools={0: dec_pool})
+
+            def fin_pipe(results: list[SimResult]) -> Evaluation:
+                res = results[0]
+                t_first, t_done = _wave_times_ms(tr, res)[0]
+                latency_ms = res.latency_ms
+                detail.update(
+                    ttft_ms=t_first,
+                    p50_token_latency_ms=(t_done - t_first)
+                    / max(self.decode_tokens - 1, 1))
+                return Evaluation(ctx.reward(latency_ms), latency_ms, True,
+                                  detail)
+
+            return SimJob((SimCall(tr, ctx.sys_cfg, par_pre,
+                                   pools={0: pre_pool, 1: dec_pool},
+                                   record_finish=True),), fin_pipe)
+
+        _, dec_tr, combined = self._phase_traces(ctx, par_pre, par_dec,
+                                                 resident)
+
+        def fin_analytic(results: list[SimResult]) -> Evaluation:
+            first, step = results
             t_token_ms = step.latency_ms
             latency_ms = first.latency_ms \
                 + (self.decode_tokens * waves - 1) * t_token_ms
             detail.update(ttft_ms=first.latency_ms - t_token_ms,
                           p50_token_latency_ms=t_token_ms)
-        return Evaluation(ctx.reward(latency_ms), latency_ms, True, detail)
+            return Evaluation(ctx.reward(latency_ms), latency_ms, True,
+                              detail)
+
+        return SimJob((SimCall(combined, ctx.sys_cfg, par_pre,
+                               pools={0: pre_pool, 1: dec_pool}),
+                       SimCall(dec_tr, ctx.sys_cfg, par_dec,
+                               pools={0: dec_pool})), fin_analytic)
+
+    def evaluate(self, ctx: EnvContext) -> Evaluation:
+        return run_sim_job(self.sim_job(ctx), ctx.backend)
 
 
 # ---------------------------------------------------------------------------
@@ -665,7 +703,7 @@ class RequestStreamScenario:
                                 max_batch=resident)
         return {"stream": self._stream_trace(ctx, par_pre, par_dec, waves)}
 
-    def evaluate(self, ctx: EnvContext) -> Evaluation:
+    def sim_job(self, ctx: EnvContext) -> "SimJob | Evaluation":
         try:
             par_pre, par_dec, resident = self._resolved(ctx)
         except ValueError as e:
@@ -691,49 +729,60 @@ class RequestStreamScenario:
         tr = self._stream_trace(ctx, par_pre, par_dec, waves)
         pre_pool = (par_pre, *sub_network_indexed(ctx.network, par_pre.n_npus))
         dec_pool = (par_dec, *sub_network_indexed(ctx.network, par_dec.n_npus))
-        res = simulate(tr, ctx.sys_cfg, par_pre,
-                       pools={0: pre_pool, 1: dec_pool}, record_finish=True)
 
-        arrivals = self.arrivals_ms()
-        wave_shapes = self._wave_shapes(waves)
-        ttfts: list[float] = []
-        tpots: list[float] = []
-        lats: list[float] = []
-        for (idxs, _), (t_first, t_done), (_, _, wave_dec) in zip(
-                waves, _wave_times_ms(tr, res), wave_shapes):
-            tpot = (t_done - t_first) / max(wave_dec - 1, 1)
-            for i in idxs:
-                # a request finishes after ITS decode length at the wave's
-                # token cadence (== t_done for the wave's longest request)
-                dec_i = shapes[i][1]
-                done_i = t_done if dec_i == wave_dec \
-                    else t_first + tpot * (dec_i - 1)
-                ttfts.append(t_first - arrivals[i])
-                tpots.append(tpot)
-                lats.append(done_i - arrivals[i])
-        horizon_ms = max(res.latency_ms, arrivals[-1])
-        m = stream_metrics(ttfts, tpots, lats, ttft_slo_ms=self.ttft_slo_ms,
-                           tpot_slo_ms=self.tpot_slo_ms,
-                           horizon_ms=horizon_ms)
-        r = stream_reward(ctx.objective, m, ctx.sys_cfg.network)
-        return Evaluation(r, m.latency_p99_ms, True, {
-            "scenario": self.name, "prefill_npus": par_pre.n_npus,
-            "decode_npus": par_dec.n_npus, "decode_tp": par_dec.tp,
-            "decode_replicas": par_dec.dp,
-            "decode_batch": int(ctx.config["decode_batch"]),
-            "batch_window_ms": float(ctx.config["batch_window_ms"]),
-            "max_inflight": int(ctx.config["max_inflight"]),
-            "waves": len(waves),
-            "wave_sizes": [len(idxs) for idxs, _ in waves],
-            "makespan_ms": res.latency_ms,
-            "prefill_gb": fp_pre.total_gb, "decode_gb": fp_dec.total_gb,
-            **({"prompt_len_mean": sum(p for p, _ in shapes) / len(shapes),
-                "prompt_len_max": max_seq,
-                "decode_len_mean": sum(d for _, d in shapes) / len(shapes),
-                "decode_len_max": max(d for _, d in shapes)}
-               if self.heterogeneous() else {}),
-            **m.detail(),
-        })
+        def fin(results: list[SimResult]) -> Evaluation:
+            res = results[0]
+            arrivals = self.arrivals_ms()
+            wave_shapes = self._wave_shapes(waves)
+            ttfts: list[float] = []
+            tpots: list[float] = []
+            lats: list[float] = []
+            for (idxs, _), (t_first, t_done), (_, _, wave_dec) in zip(
+                    waves, _wave_times_ms(tr, res), wave_shapes):
+                tpot = (t_done - t_first) / max(wave_dec - 1, 1)
+                for i in idxs:
+                    # a request finishes after ITS decode length at the
+                    # wave's token cadence (== t_done for the wave's longest
+                    # request)
+                    dec_i = shapes[i][1]
+                    done_i = t_done if dec_i == wave_dec \
+                        else t_first + tpot * (dec_i - 1)
+                    ttfts.append(t_first - arrivals[i])
+                    tpots.append(tpot)
+                    lats.append(done_i - arrivals[i])
+            horizon_ms = max(res.latency_ms, arrivals[-1])
+            m = stream_metrics(ttfts, tpots, lats,
+                               ttft_slo_ms=self.ttft_slo_ms,
+                               tpot_slo_ms=self.tpot_slo_ms,
+                               horizon_ms=horizon_ms)
+            r = stream_reward(ctx.objective, m, ctx.sys_cfg.network)
+            return Evaluation(r, m.latency_p99_ms, True, {
+                "scenario": self.name, "prefill_npus": par_pre.n_npus,
+                "decode_npus": par_dec.n_npus, "decode_tp": par_dec.tp,
+                "decode_replicas": par_dec.dp,
+                "decode_batch": int(ctx.config["decode_batch"]),
+                "batch_window_ms": float(ctx.config["batch_window_ms"]),
+                "max_inflight": int(ctx.config["max_inflight"]),
+                "waves": len(waves),
+                "wave_sizes": [len(idxs) for idxs, _ in waves],
+                "makespan_ms": res.latency_ms,
+                "prefill_gb": fp_pre.total_gb, "decode_gb": fp_dec.total_gb,
+                **({"prompt_len_mean":
+                    sum(p for p, _ in shapes) / len(shapes),
+                    "prompt_len_max": max_seq,
+                    "decode_len_mean":
+                    sum(d for _, d in shapes) / len(shapes),
+                    "decode_len_max": max(d for _, d in shapes)}
+                   if self.heterogeneous() else {}),
+                **m.detail(),
+            })
+
+        return SimJob((SimCall(tr, ctx.sys_cfg, par_pre,
+                               pools={0: pre_pool, 1: dec_pool},
+                               record_finish=True),), fin)
+
+    def evaluate(self, ctx: EnvContext) -> Evaluation:
+        return run_sim_job(self.sim_job(ctx), ctx.backend)
 
 
 # ---------------------------------------------------------------------------
@@ -820,22 +869,30 @@ class MultiTenantScenario:
                     mode="train" if t.phase == "train" else "prefill")
         return out
 
-    def _tenant_latency_ms(self, ctx: EnvContext, t: Tenant,
-                           network: Network, device: Device,
-                           par: Parallelism) -> float:
+    def _tenant_calls(self, ctx: EnvContext, t: Tenant, network: Network,
+                      device: Device, par: Parallelism) -> list[SimCall]:
+        """One tenant's simulator calls on its partition's sub-fabric —
+        prefill + decode for serving tenants, one training step otherwise
+        (``_tenant_latency`` is the matching results combiner)."""
         sys_cfg = replace(ctx.sys_cfg, network=network, device=device)
         if t.phase == "serve":
-            pre = simulate(generate_trace(t.arch, par, batch=t.batch,
-                                          seq=t.seq, mode="prefill"),
-                           sys_cfg, par)
-            dec = simulate(generate_trace(t.arch, par, batch=t.batch,
-                                          seq=t.seq, mode="decode"),
-                           sys_cfg, par)
-            return pre.latency_ms + t.decode_tokens * dec.latency_ms
-        tr = generate_trace(t.arch, par, batch=t.batch, seq=t.seq, mode="train")
-        return simulate(tr, sys_cfg, par).latency_ms
+            return [SimCall(generate_trace(t.arch, par, batch=t.batch,
+                                           seq=t.seq, mode="prefill"),
+                            sys_cfg, par),
+                    SimCall(generate_trace(t.arch, par, batch=t.batch,
+                                           seq=t.seq, mode="decode"),
+                            sys_cfg, par)]
+        return [SimCall(generate_trace(t.arch, par, batch=t.batch, seq=t.seq,
+                                       mode="train"), sys_cfg, par)]
 
-    def evaluate(self, ctx: EnvContext) -> Evaluation:
+    @staticmethod
+    def _tenant_latency(t: Tenant, results: list[SimResult]) -> float:
+        if t.phase == "serve":
+            pre, dec = results
+            return pre.latency_ms + t.decode_tokens * dec.latency_ms
+        return results[0].latency_ms
+
+    def sim_job(self, ctx: EnvContext) -> "SimJob | Evaluation":
         sizes = self._sizes(ctx)
         if len(sizes) != len(self.tenants):
             return _invalid(f"need {len(self.tenants)} partition sizes, "
@@ -844,33 +901,47 @@ class MultiTenantScenario:
             return _invalid(f"partitions {list(sizes)} oversubscribe "
                             f"{ctx.n_npus}-NPU cluster")
         cluster = self._cluster(ctx, sizes)
-        per_tenant: dict[str, dict[str, float]] = {}
-        attained, weight_sum, goodput = 0.0, 0.0, 0.0
-        worst = 0.0
+        calls: list[SimCall] = []
+        slices: list[tuple[Tenant, Any, Parallelism, int, int]] = []
         for t, part in zip(self.tenants, cluster.partitions):
             par = _auto_parallelism(t.arch, part.n_npus, t.batch, t.phase,
                                     t.seq, ctx.capacity_gb)
             if par is None:
                 return _invalid(f"tenant {t.name!r} infeasible on "
                                 f"{part.n_npus} NPUs")
-            lat = self._tenant_latency_ms(ctx, t, part.network, part.device, par)
-            att = slo_attainment(lat, t.slo_ms)
-            tput = t.batch * t.seq / max(lat, 1e-9)  # tokens/ms
-            attained += t.weight * att
-            goodput += t.weight * tput * (1.0 if lat <= t.slo_ms else 0.0)
-            weight_sum += t.weight
-            worst = max(worst, lat)
-            per_tenant[t.name] = {
-                "npus": part.n_npus, "range": part.npu_range(),
-                "latency_ms": lat, "slo_ms": t.slo_ms, "attainment": att,
-                "tp": par.tp, "dp": par.dp,
-            }
-        reward = attained / max(weight_sum, 1e-9)
-        return Evaluation(reward, worst, True, {
-            "scenario": self.name, "tenants": per_tenant,
-            "weighted_goodput_tok_per_ms": goodput,
-            "cluster": cluster.describe(),
-        })
+            tcalls = self._tenant_calls(ctx, t, part.network, part.device,
+                                        par)
+            slices.append((t, part, par, len(calls), len(tcalls)))
+            calls.extend(tcalls)
+
+        def fin(results: list[SimResult]) -> Evaluation:
+            per_tenant: dict[str, dict[str, float]] = {}
+            attained, weight_sum, goodput = 0.0, 0.0, 0.0
+            worst = 0.0
+            for t, part, par, off, n in slices:
+                lat = self._tenant_latency(t, results[off:off + n])
+                att = slo_attainment(lat, t.slo_ms)
+                tput = t.batch * t.seq / max(lat, 1e-9)  # tokens/ms
+                attained += t.weight * att
+                goodput += t.weight * tput * (1.0 if lat <= t.slo_ms else 0.0)
+                weight_sum += t.weight
+                worst = max(worst, lat)
+                per_tenant[t.name] = {
+                    "npus": part.n_npus, "range": part.npu_range(),
+                    "latency_ms": lat, "slo_ms": t.slo_ms, "attainment": att,
+                    "tp": par.tp, "dp": par.dp,
+                }
+            reward = attained / max(weight_sum, 1e-9)
+            return Evaluation(reward, worst, True, {
+                "scenario": self.name, "tenants": per_tenant,
+                "weighted_goodput_tok_per_ms": goodput,
+                "cluster": cluster.describe(),
+            })
+
+        return SimJob(tuple(calls), fin)
+
+    def evaluate(self, ctx: EnvContext) -> Evaluation:
+        return run_sim_job(self.sim_job(ctx), ctx.backend)
 
 
 # ---------------------------------------------------------------------------

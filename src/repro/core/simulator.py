@@ -1,23 +1,27 @@
-"""Discrete-event simulator for distributed ML execution (ASTRA-sim-lite).
+"""Simulation front door + the design-point-independent scheduling plan.
 
 Resources: one compute stream (roofline device model) + one communication
 engine per parallelism group (tp/dp/ep/pp), each mapped onto the network
 dims it spans.  Ready ops queue on their resource; the queue discipline is
 the paper's Collective 'Scheduling Policy' knob (LIFO favours the freshest
 — critical-path — collectives, FIFO drains in issue order).  Compute/comm
-overlap falls out of the event loop, so exposed communication is measured,
+overlap falls out of the scheduler, so exposed communication is measured,
 not assumed.
 
-Batched-DSE fast path: the trace-dependent scheduling structure (dependency
-counts, children lists, per-op resource ids, compute-op shape arrays) is
-built once per ``Trace`` and reused across every design point that shares
-it, the compute-op roofline pass is vectorized with numpy, and collective
-durations come from the memoized cost model with the per-group sub-network
-resolved once per call rather than once per op.
+HOW a trace is scheduled is a swappable backend (``repro.core.backends``):
+``simulate()`` below is a thin delegate onto the selected ``SimBackend``
+(default: the reference discrete-event heapq loop, bit-identical to the
+original in-module implementation).  This module keeps what every backend
+shares — the ``SystemConfig``/``SimResult`` value objects, the per-trace
+``_SimPlan`` (dependency counts, children lists, per-op resource ids,
+compute-op shape arrays, built once per ``Trace`` and reused across every
+design point that shares it), and the per-design-point duration pass
+(numpy-vectorized roofline for compute ops, the memoized collective cost
+model for comm ops with each group's sub-network resolved once per call
+rather than once per op).
 """
 from __future__ import annotations
 
-import heapq
 from dataclasses import dataclass, field
 from typing import Any, Sequence
 
@@ -27,6 +31,9 @@ from repro.core.collectives import multidim_collective_time_us
 from repro.core.compute import Device
 from repro.core.topology import Network, TopoDim, carve_dims
 from repro.core.workload import Op, Parallelism, Trace
+
+
+SCHED_POLICIES = ("fifo", "lifo")
 
 
 @dataclass(frozen=True)
@@ -43,6 +50,14 @@ class SystemConfig:
     # scale-out — network dim's link speed.
     xfer_bw: float | None = None        # GB/s per transfer lane
     xfer_latency_us: float = 5.0
+
+    def __post_init__(self) -> None:
+        # a typo'd policy used to silently schedule as FIFO (the duration
+        # pass only checked == "lifo"); fail at construction instead
+        if self.sched_policy not in SCHED_POLICIES:
+            raise ValueError(f"unknown sched_policy "
+                             f"{self.sched_policy!r}; "
+                             f"known: {SCHED_POLICIES}")
 
 
 def group_dims(net: Network, par: Parallelism) -> dict[str, list[tuple[int, TopoDim]]]:
@@ -113,7 +128,13 @@ class _SimPlan:
     id 0 is always pool 0's compute stream.  Every pool gets its own compute
     stream and comm engines; cross-partition ``xfer`` collectives share one
     transfer resource; ``delay`` ops (arrival releases in request-stream
-    traces) each get a private timer resource so they never serialize."""
+    traces) each get a private timer resource so they never serialize.
+
+    Comm ops are condensed into duration CLASSES — the distinct
+    ``(pool, group, coll, size)`` shapes (layers repeat shapes, so a trace
+    with thousands of collectives typically has a few dozen classes): the
+    per-design-point duration pass prices each class once and scatters,
+    instead of walking every op through a memo dict."""
     n_ops: int
     res_names: list[str]                # per resource id: "compute" | group
     res_pool: list[int]                 # per resource id: owning pool
@@ -124,7 +145,10 @@ class _SimPlan:
     comp_uids: np.ndarray
     comp_flops: np.ndarray
     comp_bytes: np.ndarray
-    coll_ops: list[tuple[int, str, float, str, int, int]]  # (uid, coll, size, group, pool, repeat)
+    coll_shapes: list[tuple[int, str, str, float]]  # per class: (pool, group, coll, size)
+    coll_uids: np.ndarray               # comm-op uids
+    coll_class: np.ndarray              # per comm op: coll_shapes index
+    coll_repeat: np.ndarray             # per comm op: back-to-back repeats
     delay_ops: list[tuple[int, float]]  # (uid, delay_us)
     pools: tuple[int, ...]
 
@@ -147,7 +171,11 @@ def _sim_plan(trace: Trace) -> _SimPlan:
     comp_idx: list[int] = []
     comp_flops: list[float] = []
     comp_bytes: list[float] = []
-    coll_ops: list[tuple[int, str, float, str, int, int]] = []
+    class_index: dict[tuple[int, str, str, float], int] = {}
+    coll_shapes: list[tuple[int, str, str, float]] = []
+    coll_uids: list[int] = []
+    coll_class: list[int] = []
+    coll_repeat: list[int] = []
     delay_ops: list[tuple[int, float]] = []
     pools: set[int] = {0}
 
@@ -178,8 +206,14 @@ def _sim_plan(trace: Trace) -> _SimPlan:
             # the transfer engine bridges partitions: one shared resource
             pool = 0 if op.group == "xfer" else op.pool
             res_of[op.uid] = resource(pool, op.group)
-            coll_ops.append((op.uid, op.coll, op.size_bytes, op.group,
-                             op.pool, op.repeat))
+            key = (op.pool, op.group, op.coll, op.size_bytes)
+            cls = class_index.get(key)
+            if cls is None:
+                cls = class_index[key] = len(coll_shapes)
+                coll_shapes.append(key)
+            coll_uids.append(op.uid)
+            coll_class.append(cls)
+            coll_repeat.append(op.repeat)
         ndeps0[op.uid] = len(op.deps)
         if not op.deps:
             roots.append(op.uid)
@@ -191,7 +225,11 @@ def _sim_plan(trace: Trace) -> _SimPlan:
                     comp_uids=np.array(comp_idx, dtype=np.intp),
                     comp_flops=np.array(comp_flops, dtype=np.float64),
                     comp_bytes=np.array(comp_bytes, dtype=np.float64),
-                    coll_ops=coll_ops, delay_ops=delay_ops,
+                    coll_shapes=coll_shapes,
+                    coll_uids=np.array(coll_uids, dtype=np.intp),
+                    coll_class=np.array(coll_class, dtype=np.intp),
+                    coll_repeat=np.array(coll_repeat, dtype=np.float64),
+                    delay_ops=delay_ops,
                     pools=tuple(sorted(pools)))
     trace._sim_plan = plan  # traces are cached + immutable; piggyback the plan
     return plan
@@ -205,24 +243,22 @@ def _xfer_time_us(cfg: SystemConfig, size_bytes: float) -> float:
 
 
 def _op_durations(plan: _SimPlan, cfg: SystemConfig,
-                  gdims_by_pool: dict[int, dict[str, list[tuple[int, TopoDim]]]]) -> list[float]:
+                  gdims_by_pool: dict[int, dict[str, list[tuple[int, TopoDim]]]]) -> np.ndarray:
     """Duration of every op: vectorized roofline for the compute ops, the
-    memoized collective model for the comm ops (a repeat of k back-to-back
-    identical collectives pays k full latency+bandwidth terms)."""
+    memoized collective model priced once per duration CLASS and scattered
+    to the comm ops (a repeat of k back-to-back identical collectives pays
+    k full latency+bandwidth terms)."""
     arr = np.zeros(plan.n_ops, dtype=np.float64)
     if len(plan.comp_uids):
         arr[plan.comp_uids] = cfg.device.op_times_us(plan.comp_flops,
                                                      plan.comp_bytes)
-    dur = arr.tolist()
-    group_nets = {(pool, g): _group_net(cfg, carved)
-                  for pool, gdims in gdims_by_pool.items()
-                  for g, carved in gdims.items()}
-    chunks, mode = cfg.chunks, cfg.multidim_coll
-    local: dict[tuple[int, str, str, float], float] = {}  # layers repeat shapes
-    for uid, coll, size, group, pool, repeat in plan.coll_ops:
-        key = (pool, group, coll, size)
-        t = local.get(key)
-        if t is None:
+    if plan.coll_shapes:
+        group_nets = {(pool, g): _group_net(cfg, carved)
+                      for pool, gdims in gdims_by_pool.items()
+                      for g, carved in gdims.items()}
+        chunks, mode = cfg.chunks, cfg.multidim_coll
+        class_t = np.empty(len(plan.coll_shapes), dtype=np.float64)
+        for cls, (pool, group, coll, size) in enumerate(plan.coll_shapes):
             if group == "xfer":
                 t = _xfer_time_us(cfg, size)
             else:
@@ -233,33 +269,25 @@ def _op_durations(plan: _SimPlan, cfg: SystemConfig,
                     sub, algos = resolved
                     t = multidim_collective_time_us(coll, size, sub, algos,
                                                     chunks=chunks, mode=mode)
-            local[key] = t
-        dur[uid] = t * repeat
+            class_t[cls] = t
+        arr[plan.coll_uids] = class_t[plan.coll_class] * plan.coll_repeat
     for uid, delay_us in plan.delay_ops:
-        dur[uid] = delay_us
-    return dur
+        arr[uid] = delay_us
+    return arr
 
 
-def simulate(trace: Trace, cfg: SystemConfig, par: Parallelism, *,
-             pools: dict[int, Parallelism | tuple[Parallelism, Network]] | None = None,
-             record_per_op: bool = False,
-             record_finish: bool = False) -> SimResult:
-    """Schedule ``trace`` on the device + network of ``cfg``.
+def pool_group_dims(plan: _SimPlan, cfg: SystemConfig, par: Parallelism,
+                    pools: dict[int, Any] | None) -> dict[int, dict[str, list[tuple[int, TopoDim]]]]:
+    """Resolve every pool's parallelism-group -> carved-dims mapping.
 
-    ``pools`` maps pool id -> that partition's Parallelism for multi-pool
-    traces (default: every op belongs to pool 0, parallelized by ``par``).
-    A ``(Parallelism, Network)`` value prices the pool's collectives on the
-    sub-fabric its NPU slice actually spans instead of the whole cluster; a
-    ``(Parallelism, Network, dim_map)`` value (``topology.
-    sub_network_indexed``) additionally maps each sub-fabric dim back to its
-    source physical dim so ``cfg.coll_algo`` is resolved against the dims
-    the pool's traffic actually rides.
-    ``record_per_op`` opts into materializing ``SimResult.per_op_us`` (plus
-    ``op_finish_us``); ``record_finish`` materializes only
-    ``SimResult.op_finish_us`` — the cheaper flag streaming scenarios use
-    per design point to read wave TTFT/TPOT without allocating the per-op
-    duration dict.  Both are off on the batched DSE hot path."""
-    plan = _sim_plan(trace)
+    ``pools`` maps pool id -> that partition's Parallelism (default: every
+    pool is parallelized by ``par`` on ``cfg.network``).  A ``(Parallelism,
+    Network)`` value prices the pool's collectives on the sub-fabric its NPU
+    slice actually spans instead of the whole cluster; a ``(Parallelism,
+    Network, dim_map)`` value (``topology.sub_network_indexed``)
+    additionally maps each sub-fabric dim back to its source physical dim so
+    ``cfg.coll_algo`` is resolved against the dims the pool's traffic
+    actually rides."""
     if pools is None:
         pools = {p: par for p in plan.pools}
     gdims_by_pool = {}
@@ -281,69 +309,25 @@ def simulate(trace: Trace, cfg: SystemConfig, par: Parallelism, *,
             gd = {g: [(dim_map[min(i, last)], d) for i, d in v]
                   for g, v in gd.items()}
         gdims_by_pool[p] = gd
-    dur = _op_durations(plan, cfg, gdims_by_pool)
+    return gdims_by_pool
 
+
+def plan_durations(trace: Trace, cfg: SystemConfig, par: Parallelism,
+                   pools: dict[int, Any] | None = None) -> tuple[_SimPlan, np.ndarray]:
+    """The shared per-design-point half of every backend: the (cached)
+    scheduling plan plus this config's per-op durations (float64)."""
+    plan = _sim_plan(trace)
+    return plan, _op_durations(plan, cfg, pool_group_dims(plan, cfg, par,
+                                                          pools))
+
+
+def build_sim_result(plan: _SimPlan, *, makespan: float,
+                     busy: Sequence[float], dur: Sequence[float],
+                     finish: dict[int, float],
+                     record_per_op: bool = False) -> SimResult:
+    """Assemble a ``SimResult`` from a backend's schedule: per-resource busy
+    times, the makespan, and (opt-in) op finish times."""
     n_res = len(plan.res_names)
-    ndeps = list(plan.ndeps0)
-    children = plan.children
-    res_of = plan.res_of
-    queues: list[list[tuple[int, int]]] = [[] for _ in range(n_res)]
-    free_at = [0.0] * n_res
-    busy = [0.0] * n_res
-    sign = -1 if cfg.sched_policy == "lifo" else 1
-    seq = 0  # enqueue order tiebreaker
-    hpush, hpop = heapq.heappush, heapq.heappop
-
-    events: list[tuple[float, int, int]] = []  # (time, eseq, uid)
-    eseq = 0
-    n_finished = 0
-    finish: dict[int, float] = {}
-    track_finish = record_per_op or record_finish
-
-    for uid in plan.roots:
-        seq += 1
-        hpush(queues[res_of[uid]], (sign * seq, uid))
-    for r in range(n_res):
-        if queues[r]:
-            _, uid = hpop(queues[r])
-            d = dur[uid]
-            free_at[r] = d
-            busy[r] += d
-            eseq += 1
-            hpush(events, (d, eseq, uid))
-
-    makespan = 0.0
-    while events:
-        now, _, uid = hpop(events)
-        n_finished += 1
-        if track_finish:
-            finish[uid] = now
-        if now > makespan:
-            makespan = now
-        # only the freed resource and resources receiving new work can start
-        # an op here: any other free resource with queued work would already
-        # have been started when it last freed (the loop's invariant)
-        cand = [res_of[uid]]
-        for ch in children[uid]:
-            ndeps[ch] -= 1
-            if ndeps[ch] == 0:
-                seq += 1
-                r = res_of[ch]
-                hpush(queues[r], (sign * seq, ch))
-                if r not in cand:
-                    cand.append(r)
-        for r in cand:
-            if free_at[r] <= now and queues[r]:
-                _, nxt = hpop(queues[r])
-                d = dur[nxt]
-                free_at[r] = now + d
-                busy[r] += d
-                eseq += 1
-                hpush(events, (now + d, eseq, nxt))
-
-    if n_finished != plan.n_ops:
-        raise RuntimeError(f"deadlock: {n_finished}/{plan.n_ops} ops finished")
-
     pool_compute = {plan.res_pool[r]: busy[r]
                     for r in range(n_res) if plan.res_names[r] == "compute"}
     comm_busy: dict[str, float] = {}
@@ -353,6 +337,11 @@ def simulate(trace: Trace, cfg: SystemConfig, par: Parallelism, *,
             continue  # delay timers are releases, not communication
         key = name if plan.res_pool[r] == 0 else f"{name}@p{plan.res_pool[r]}"
         comm_busy[key] = comm_busy.get(key, 0.0) + busy[r]
+    if record_per_op:
+        per_op = dict(enumerate(dur.tolist() if isinstance(dur, np.ndarray)
+                                else dur))
+    else:
+        per_op = {}
     return SimResult(
         makespan_us=makespan,
         compute_busy_us=pool_compute.get(0, 0.0),
@@ -361,7 +350,33 @@ def simulate(trace: Trace, cfg: SystemConfig, par: Parallelism, *,
         # aggregate compute across pools is the honest subtrahend (for a
         # single pool this is exactly the old makespan - compute_busy)
         exposed_comm_us=max(0.0, makespan - sum(pool_compute.values())),
-        per_op_us=dict(enumerate(dur)) if record_per_op else {},
+        per_op_us=per_op,
         pool_compute_us=pool_compute,
         op_finish_us=finish,
     )
+
+
+def simulate(trace: Trace, cfg: SystemConfig, par: Parallelism, *,
+             pools: dict[int, Parallelism | tuple[Parallelism, Network]] | None = None,
+             record_per_op: bool = False,
+             record_finish: bool = False,
+             backend: "str | Any | None" = None) -> SimResult:
+    """Schedule ``trace`` on the device + network of ``cfg``.
+
+    A thin delegate onto the selected simulation backend
+    (``repro.core.backends``); the default ``"reference"`` backend is the
+    original discrete-event heapq loop, bit-identical to the pre-backend
+    in-module implementation — no caller breaks.
+
+    ``pools`` maps pool id -> that partition's Parallelism for multi-pool
+    traces (see ``pool_group_dims`` for the accepted value shapes).
+    ``record_per_op`` opts into materializing ``SimResult.per_op_us`` (plus
+    ``op_finish_us``); ``record_finish`` materializes only
+    ``SimResult.op_finish_us`` — the cheaper flag streaming scenarios use
+    per design point to read wave TTFT/TPOT without allocating the per-op
+    duration dict.  Both are off on the batched DSE hot path."""
+    from repro.core.backends import get_backend
+
+    return get_backend(backend).simulate(trace, cfg, par, pools=pools,
+                                         record_per_op=record_per_op,
+                                         record_finish=record_finish)

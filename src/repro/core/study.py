@@ -33,9 +33,10 @@ from pathlib import Path
 from typing import Any, Callable, Mapping
 
 from repro.core.agents.base import KNOWN_AGENTS
+from repro.core.backends import BACKEND_REGISTRY
 from repro.core.dse import SearchResult, run_search
 from repro.core.psa import ParameterSet, paper_psa
-from repro.core.rewards import get_objective
+from repro.core.rewards import Evaluation, get_objective
 from repro.core.scenario import Scenario, build_scenario, scenario_psa
 from repro.core.systems import get_system
 
@@ -136,6 +137,16 @@ class StudySpec:
     workers: int = 0
     max_pp: int = 4
     capacity_gb: float = _SPEC_DEFAULT_CAPACITY_GB
+    # simulation backend every cell's evaluations run on (registry name
+    # from ``repro.core.backends``; part of the spec hash — a vectorized
+    # backend's results may differ within tolerance from the reference's)
+    backend: str = "reference"
+    # optional cross-campaign persistent eval store (JSONL): memoized
+    # evaluations preload from here and fresh ones append back, so
+    # successive studies over the same (arch x system x scenario x
+    # objective x backend) stop re-evaluating known design points.
+    # Hash-exempt like ``workers`` — reuse never changes results.
+    eval_store_path: "str | None" = None
 
     def __post_init__(self):
         set_ = object.__setattr__
@@ -164,6 +175,9 @@ class StudySpec:
                 f"objective {obj.name!r} needs a streaming scenario "
                 f"(per-request metrics); scenario {self.scenario!r} only "
                 f"supports scalar objectives")
+        if self.backend not in BACKEND_REGISTRY:
+            raise ValueError(f"unknown simulation backend {self.backend!r}; "
+                             f"known: {sorted(BACKEND_REGISTRY)}")
         if not self.agents:
             raise ValueError("agents grid is empty")
         if not self.seeds:
@@ -193,6 +207,8 @@ class StudySpec:
             "seeds": list(self.seeds), "steps": self.steps,
             "batch_size": self.batch_size, "workers": self.workers,
             "max_pp": self.max_pp, "capacity_gb": self.capacity_gb,
+            "backend": self.backend,
+            "eval_store_path": self.eval_store_path,
         }
 
     @classmethod
@@ -226,9 +242,31 @@ class StudySpec:
         so a JSONL file can't silently mix campaigns.  ``workers`` is
         excluded: it only parallelizes evaluation (results are bit-identical
         across the pool path), so a killed campaign may legitimately resume
-        with a different pool size."""
+        with a different pool size.  ``eval_store_path`` is excluded for the
+        same reason — memo reuse never changes results.  ``backend`` IS
+        hashed: backends may differ within tolerance."""
         d = self.to_dict()
         del d["workers"]
+        del d["eval_store_path"]
+        if d["backend"] == "reference":
+            # drop the default so campaigns recorded before the backend
+            # field existed (hashes computed without the key) stay
+            # resumable; a non-default backend changes results and hashes
+            del d["backend"]
+        canon = json.dumps(d, sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(canon.encode()).hexdigest()[:16]
+
+    def eval_signature(self) -> str:
+        """Hash of the evaluation-relevant spec subset: two studies sharing
+        it produce identical ``Evaluation``s for identical configs, so their
+        persistent eval-store entries are interchangeable.  Search-shaping
+        fields (agents/seeds/steps/stacks/overrides/budgets) only change
+        WHICH points are visited, not their values."""
+        d = {"arch": self.arch, "system": self.system,
+             "scenario": self.scenario,
+             "scenario_params": _thaw(self.scenario_params),
+             "objective": self.objective, "capacity_gb": self.capacity_gb,
+             "backend": self.backend}
         canon = json.dumps(d, sort_keys=True, separators=(",", ":"))
         return hashlib.sha256(canon.encode()).hexdigest()[:16]
 
@@ -262,6 +300,7 @@ class StudySpec:
                          scenario=self.build_scenario(),
                          objective=self.objective,
                          capacity_gb=self.capacity_gb,
+                         backend=self.backend,
                          eval_store=eval_store)
 
     # -- the campaign grid ------------------------------------------------
@@ -274,6 +313,97 @@ class StudySpec:
             for seed in self.seeds:
                 out.append((f"{ai}:{aspec.kind}:s{seed}", aspec, seed))
         return out
+
+
+# ---------------------------------------------------------------------------
+# Persistent (cross-campaign) eval store
+# ---------------------------------------------------------------------------
+
+def _json_default(o: Any) -> Any:
+    """Detail dicts occasionally carry numpy scalars; coerce or stringify."""
+    try:
+        return float(o)
+    except (TypeError, ValueError):
+        return str(o)
+
+
+def iter_jsonl_lenient(path: Path):
+    """Yield parsed records from a JSONL file, skipping blank and malformed
+    lines (a campaign killed mid-append leaves a torn tail).  The lenient
+    reader for cache/inspection surfaces — resume's strict reader
+    (``_read_results``) keeps its own corruption handling."""
+    for line in path.read_text().splitlines():
+        if not line.strip():
+            continue
+        try:
+            yield json.loads(line)
+        except json.JSONDecodeError:
+            continue
+
+
+class PersistentEvalStore:
+    """A JSONL file of memoized (config -> Evaluation) pairs shared across
+    campaigns.  Entries are stamped with the owning study's
+    ``eval_signature()`` so one file can serve many studies without ever
+    cross-hitting incompatible ones; malformed lines (a campaign killed
+    mid-append) are skipped — this is a cache, not a ledger."""
+
+    def __init__(self, path: "str | Path", signature: str) -> None:
+        self.path = Path(path)
+        self.signature = signature
+        self.entries: list[tuple[dict, Evaluation]] = []
+        self._known: set[str] = set()
+        self._pending: list[str] = []
+        if self.path.exists():
+            for rec in iter_jsonl_lenient(self.path):
+                if rec.get("sig") != signature:
+                    continue
+                config = rec.get("config")
+                if not isinstance(config, dict) or "reward" not in rec:
+                    continue
+                self._known.add(self._canon(config))
+                self.entries.append((config, Evaluation(
+                    rec["reward"], rec["latency_ms"], rec["valid"],
+                    rec.get("detail") or {})))
+
+    @staticmethod
+    def _canon(config: Mapping[str, Any]) -> str:
+        return json.dumps(_thaw(dict(config)), sort_keys=True,
+                          separators=(",", ":"), default=_json_default)
+
+    def preload(self, env) -> int:
+        """Install every matching entry into ``env.eval_store`` (keyed
+        through the env's own canonicalization) and hook ``env.eval_record``
+        so fresh evaluations queue for ``flush()``."""
+        assert env.eval_store is not None, "env needs a shared eval_store"
+        for config, ev in self.entries:
+            cfg = {k: _freeze(v) for k, v in config.items()}
+            env.eval_store[env._point_key(cfg)] = ev
+        env.eval_record = self.record
+        return len(self.entries)
+
+    def record(self, config: Mapping[str, Any], ev: Evaluation) -> None:
+        canon = self._canon(config)
+        if canon in self._known:
+            return
+        self._known.add(canon)
+        self._pending.append(json.dumps(
+            {"sig": self.signature, "config": _thaw(dict(config)),
+             "reward": ev.reward, "latency_ms": ev.latency_ms,
+             "valid": ev.valid, "detail": _thaw(ev.detail)},
+            default=_json_default))
+
+    def flush(self) -> int:
+        """Append queued fresh evaluations; returns how many were written."""
+        if not self._pending:
+            return 0
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        with self.path.open("a") as f:
+            for line in self._pending:
+                f.write(line + "\n")
+        n = len(self._pending)
+        self._pending = []
+        return n
 
 
 # ---------------------------------------------------------------------------
@@ -300,6 +430,14 @@ class StudyResult:
     distinct_points: int
     out: Path | None
     wall_s: float
+    # persistent eval store accounting (spec.eval_store_path): entries
+    # preloaded from disk, and fresh ones appended back after the campaign
+    store_preloaded: int = 0
+    store_persisted: int = 0
+
+    @property
+    def store_hit_rate(self) -> float:
+        return self.store_hits / max(self.store_hits + self.store_misses, 1)
 
     @property
     def cells_run(self) -> int:
@@ -403,7 +541,16 @@ def run_study(spec: StudySpec, *, out: "str | Path | None" = None,
     pset = spec.build_pset()
     store: dict = {}
     env = spec.build_env(eval_store=store)
+    persist: PersistentEvalStore | None = None
+    preloaded = 0
+    if spec.eval_store_path:
+        persist = PersistentEvalStore(spec.eval_store_path,
+                                      spec.eval_signature())
+        preloaded = persist.preload(env)
+        say(f"eval store {persist.path}: preloaded {preloaded} "
+            f"evaluation(s) [{persist.signature}]")
     outcomes: list[CellOutcome] = []
+    persisted = 0
     t0 = time.time()
 
     writer = None
@@ -456,12 +603,23 @@ def run_study(spec: StudySpec, *, out: "str | Path | None" = None,
                            "finished_unix": time.time()}
                     writer.write(json.dumps(rec) + "\n")
                     writer.flush()
+                if persist is not None:
+                    # per-cell flush: a killed campaign keeps everything up
+                    # to its last finished cell (the lenient reader skips a
+                    # torn tail), and pending memory stays bounded
+                    persisted += persist.flush()
     finally:
+        if persist is not None:
+            persisted += persist.flush()
         if writer is not None:
             writer.close()
 
+    if persist is not None:
+        say(f"eval store {persist.path}: persisted {persisted} new "
+            f"evaluation(s)")
     return StudyResult(spec=spec, outcomes=outcomes,
                        store_hits=env.store_hits,
                        store_misses=env.store_misses,
                        distinct_points=len(store), out=out_path,
-                       wall_s=time.time() - t0)
+                       wall_s=time.time() - t0,
+                       store_preloaded=preloaded, store_persisted=persisted)

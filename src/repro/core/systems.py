@@ -113,9 +113,10 @@ def system_env(arch, system: "str | SystemPreset", *, batch: int = 1024,
                seq: int | None = None, objective="perf_per_bw",
                mode: str = "train", scenario=None,
                eval_store: dict | None = None, decode_tokens: int = 64,
-               capacity_gb: float = 24.0):
+               capacity_gb: float = 24.0, backend: str = "reference"):
     """A ``CosmicEnv`` over a registered system.  ``arch`` is an ``ARCHS``
-    key or an ``ArchSpec``; ``seq`` defaults to the arch's max_seq."""
+    key or an ``ArchSpec``; ``seq`` defaults to the arch's max_seq;
+    ``backend`` selects the simulation backend (``repro.core.backends``)."""
     from repro.configs import ARCHS
     from repro.core.env import CosmicEnv
 
@@ -125,4 +126,5 @@ def system_env(arch, system: "str | SystemPreset", *, batch: int = 1024,
                      scenario=scenario, batch=batch,
                      seq=seq or spec.max_seq, mode=mode,
                      decode_tokens=decode_tokens, objective=objective,
-                     eval_store=eval_store, capacity_gb=capacity_gb)
+                     eval_store=eval_store, capacity_gb=capacity_gb,
+                     backend=backend)

@@ -1,15 +1,20 @@
 """``python -m repro.dse`` — the Study CLI.
 
     python -m repro.dse run study.json [--out results.jsonl] [--resume]
+                                       [--backend reference|jax]
+    python -m repro.dse compare a.results.jsonl b.results.jsonl
     python -m repro.dse list-scenarios
     python -m repro.dse list-systems
     python -m repro.dse list-objectives
+    python -m repro.dse list-backends
 
 ``run`` executes a serialized ``StudySpec`` as one campaign (shared
 eval_store + process pool across the (agent x seed) grid), streaming
 per-cell results to a JSONL file next to the spec; ``--resume`` finishes a
-half-done campaign without re-evaluating completed cells.  The ``list-*``
-commands enumerate the registries a spec's names resolve through.
+half-done campaign without re-evaluating completed cells.  ``compare``
+prints a per-cell best-reward table over two results files and a one-line
+winner summary.  The ``list-*`` commands enumerate the registries a spec's
+names resolve through.
 """
 from __future__ import annotations
 
@@ -25,37 +30,118 @@ def _cmd_run(args: argparse.Namespace) -> int:
     say = (lambda s: None) if args.quiet else print
     try:
         spec = StudySpec.from_json(Path(args.spec))
-        if args.steps is not None or args.workers is not None:
-            # a --steps override changes the spec (and its hash): a resumed
-            # run must use the same override as the original.  --workers
-            # only changes evaluation parallelism and is hash-exempt.
+        if args.steps is not None or args.workers is not None \
+                or args.backend is not None:
+            # a --steps or --backend override changes the spec (and its
+            # hash): a resumed run must use the same override as the
+            # original.  --workers only changes evaluation parallelism and
+            # is hash-exempt.
             spec = dataclasses.replace(
                 spec,
                 steps=args.steps if args.steps is not None else spec.steps,
                 workers=args.workers if args.workers is not None
-                else spec.workers)
+                else spec.workers,
+                backend=args.backend if args.backend is not None
+                else spec.backend)
         say(f"study {spec.name!r} [{spec.spec_hash()}]: "
             f"{spec.arch} on {spec.system}, scenario={spec.scenario}, "
-            f"objective={spec.objective}, "
+            f"objective={spec.objective}, backend={spec.backend}, "
             f"{len(spec.agents)} agent(s) x {len(spec.seeds)} seed(s)")
+        # instantiate the backend BEFORE run_study touches the results
+        # file: a missing optional dep (the jax extra) must fail with a
+        # clean error, not a traceback after the header was written
+        from repro.core.backends import get_backend
+        get_backend(spec.backend)
         out = Path(args.out) if args.out else \
             Path(args.spec).with_suffix(".results.jsonl")
         res = run_study(spec, out=out, resume=args.resume, log=say)
-    except (ValueError, OSError) as e:
+    except (ValueError, OSError, ImportError) as e:
         # ValueError covers spec validation + resume refusals + bad JSON
-        # (json.JSONDecodeError subclasses it); OSError covers missing files
+        # (json.JSONDecodeError subclasses it); OSError covers missing
+        # files; ImportError covers an unavailable optional backend
         print(f"error: {e}", file=sys.stderr)
         return 2
     best = res.best()
     if best is not None:
         say(f"best cell {best.cell_id}: reward={best.result.best_reward:.6g}"
             f" latency_ms={best.result.best_latency_ms:.1f}")
+    persist = "" if res.spec.eval_store_path is None else \
+        (f"store_preloaded={res.store_preloaded} "
+         f"store_persisted={res.store_persisted} ")
     # the stable machine-readable trailer (CI greps cells_run on resume)
     print(f"campaign done: cells_run={res.cells_run} "
           f"cells_skipped={res.cells_skipped} store_hits={res.store_hits} "
           f"store_misses={res.store_misses} "
+          f"store_hit_rate={res.store_hit_rate:.2f} {persist}"
           f"distinct_points={res.distinct_points} "
           f"wall_s={res.wall_s:.1f} results={res.out}")
+    return 0
+
+
+def _read_campaign(path: Path) -> tuple[dict, dict[str, dict]]:
+    """(study header, cell_id -> cell record) from a results JSONL."""
+    from repro.core.study import iter_jsonl_lenient
+
+    header: dict = {}
+    cells: dict[str, dict] = {}
+    for rec in iter_jsonl_lenient(path):
+        if rec.get("record") == "study" and not header:
+            header = rec
+        elif rec.get("record") == "cell":
+            cells[rec["cell_id"]] = rec
+    if not cells:
+        raise ValueError(f"{path} holds no cell records")
+    return header, cells
+
+
+def _cmd_compare(args: argparse.Namespace) -> int:
+    path_a, path_b = Path(args.a), Path(args.b)
+    try:
+        (head_a, cells_a), (head_b, cells_b) = \
+            _read_campaign(path_a), _read_campaign(path_b)
+    except (OSError, ValueError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    hash_a, hash_b = head_a.get("spec_hash"), head_b.get("spec_hash")
+    if hash_a != hash_b:
+        print(f"warning: spec hashes differ ({hash_a} vs {hash_b}) — "
+              f"the campaigns ran different studies; comparing by cell id "
+              f"anyway", file=sys.stderr)
+
+    def reward(rec: "dict | None") -> "float | None":
+        return None if rec is None else rec["result"]["best_reward"]
+
+    ids = list(dict.fromkeys([*cells_a, *cells_b]))
+    name_a, name_b = path_a.name, path_b.name
+    w = max(len(i) for i in ids)
+    print(f"{'cell':<{w}}  {'A: ' + name_a:>24}  {'B: ' + name_b:>24}  "
+          f"delta")
+    wins_a = wins_b = 0
+    for cid in ids:
+        ra, rb = reward(cells_a.get(cid)), reward(cells_b.get(cid))
+        fa = "n/a" if ra is None else f"{ra:.6g}"
+        fb = "n/a" if rb is None else f"{rb:.6g}"
+        if ra is None or rb is None:
+            delta = "n/a"
+        elif rb == ra:
+            delta = "tie"
+        else:
+            wins_b += rb > ra
+            wins_a += ra > rb
+            delta = "+inf% B" if ra == 0 else \
+                f"{(rb - ra) / abs(ra) * 100:+.2f}% {'B' if rb > ra else 'A'}"
+        print(f"{cid:<{w}}  {fa:>24}  {fb:>24}  {delta}")
+
+    both = [cid for cid in ids if cid in cells_a and cid in cells_b]
+    best_a = max((reward(cells_a[c]) for c in cells_a), default=None)
+    best_b = max((reward(cells_b[c]) for c in cells_b), default=None)
+    if wins_a == wins_b:
+        verdict = "tie"
+    else:
+        win_name, wins = (name_a, wins_a) if wins_a > wins_b \
+            else (name_b, wins_b)
+        verdict = f"{win_name} — better in {wins}/{len(both)} shared cells"
+    print(f"winner: {verdict} (best reward A={best_a:.6g} B={best_b:.6g})")
     return 0
 
 
@@ -85,6 +171,15 @@ def _cmd_list_objectives(args: argparse.Namespace) -> int:
     return 0
 
 
+def _cmd_list_backends(args: argparse.Namespace) -> int:
+    from repro.core.backends import backend_available, list_backends
+
+    for name, doc in sorted(list_backends().items()):
+        avail = "" if backend_available(name) else " [unavailable]"
+        print(f"{name:12s} {doc}{avail}")
+    return 0
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.dse",
@@ -102,9 +197,18 @@ def main(argv: list[str] | None = None) -> int:
                        help="override the spec's step budget")
     run_p.add_argument("--workers", type=int, default=None,
                        help="override the spec's process-pool size")
+    run_p.add_argument("--backend", default=None,
+                       help="override the spec's simulation backend "
+                            "(see list-backends)")
     run_p.add_argument("--quiet", action="store_true",
                        help="only print the final campaign trailer")
     run_p.set_defaults(fn=_cmd_run)
+
+    cmp_p = sub.add_parser(
+        "compare", help="per-cell best-reward table over two results files")
+    cmp_p.add_argument("a", help="first results .jsonl")
+    cmp_p.add_argument("b", help="second results .jsonl")
+    cmp_p.set_defaults(fn=_cmd_compare)
 
     sub.add_parser("list-scenarios",
                    help="registered scenario kinds").set_defaults(
@@ -115,6 +219,9 @@ def main(argv: list[str] | None = None) -> int:
     sub.add_parser("list-objectives",
                    help="registered objectives").set_defaults(
         fn=_cmd_list_objectives)
+    sub.add_parser("list-backends",
+                   help="registered simulation backends").set_defaults(
+        fn=_cmd_list_backends)
 
     args = ap.parse_args(argv)
     return args.fn(args)

@@ -340,8 +340,146 @@ def test_cli_run_and_resume(tmp_path, capsys):
                  "--resume"]) == 0
     assert "cells_run=0 cells_skipped=1" in capsys.readouterr().out
 
-    for cmd in ("list-scenarios", "list-systems", "list-objectives"):
+    for cmd in ("list-scenarios", "list-systems", "list-objectives",
+                "list-backends"):
         assert main([cmd]) == 0
     listed = capsys.readouterr().out
     assert "request-stream" in listed and "system2" in listed \
-        and "goodput" in listed
+        and "goodput" in listed and "reference" in listed
+
+
+# ---------------------------------------------------------------------------
+# (f) simulation-backend selection on the spec
+# ---------------------------------------------------------------------------
+
+def test_spec_backend_field_roundtrip_and_validation():
+    spec = _train_spec(backend="reference")
+    assert StudySpec.from_json(spec.to_json()) == spec
+    # the backend changes results (within tolerance), so it changes the hash
+    assert _train_spec(backend="jax").spec_hash() != spec.spec_hash()
+    # ...but the default backend hashes as if the field didn't exist, so
+    # campaigns recorded before PR 5 stay resumable
+    import hashlib
+
+    d = spec.to_dict()
+    for k in ("workers", "eval_store_path", "backend"):
+        del d[k]
+    pre_pr5 = hashlib.sha256(json.dumps(
+        d, sort_keys=True, separators=(",", ":")).encode()).hexdigest()[:16]
+    assert spec.spec_hash() == pre_pr5
+    with pytest.raises(ValueError, match="unknown simulation backend"):
+        _train_spec(backend="not-a-backend")
+    env = spec.build_env()
+    assert env.backend == "reference"
+    # old spec JSONs (no backend key) load with the default
+    d = spec.to_dict()
+    del d["backend"]
+    assert StudySpec.from_dict(d).backend == "reference"
+
+
+def test_cli_backend_override(tmp_path, capsys):
+    pytest.importorskip("jax")
+    from repro.dse import main
+
+    spec_path = tmp_path / "s.json"
+    _train_spec(steps=6, batch_size=3).to_json(spec_path)
+    assert main(["run", str(spec_path), "--backend", "jax",
+                 "--out", str(tmp_path / "r.jsonl")]) == 0
+    assert "backend=jax" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# (g) cross-campaign persistent eval store
+# ---------------------------------------------------------------------------
+
+def test_persistent_eval_store_reused_across_campaigns(tmp_path):
+    store_path = tmp_path / "evals.jsonl"
+    spec = _train_spec(steps=10, batch_size=5,
+                       eval_store_path=str(store_path))
+    # eval_store_path is hash-exempt (reuse never changes results)
+    assert spec.spec_hash() == _train_spec(steps=10,
+                                           batch_size=5).spec_hash()
+
+    first = run_study(spec, out=tmp_path / "r1.jsonl")
+    assert first.store_preloaded == 0
+    assert first.store_persisted == first.distinct_points > 0
+    assert store_path.exists()
+
+    second = run_study(spec, out=tmp_path / "r2.jsonl")
+    assert second.store_preloaded == first.store_persisted
+    assert second.store_misses == 0          # every point came from disk
+    assert second.store_hit_rate == 1.0
+    assert second.store_persisted == 0       # nothing new to write back
+    # and the campaign's results are identical to the fresh one's
+    assert [o.result.best_reward for o in second.outcomes] == \
+        [o.result.best_reward for o in first.outcomes]
+    assert [o.result.reward_curve for o in second.outcomes] == \
+        [o.result.reward_curve for o in first.outcomes]
+
+
+def test_persistent_eval_store_isolates_incompatible_studies(tmp_path):
+    """Entries are stamped with the evaluation signature: a study over a
+    different (arch/objective/...) must not preload another's results."""
+    store_path = tmp_path / "evals.jsonl"
+    spec_a = _train_spec(steps=6, batch_size=3,
+                         eval_store_path=str(store_path))
+    run_study(spec_a, out=tmp_path / "a.jsonl")
+
+    spec_b = _train_spec(steps=6, batch_size=3, objective="latency",
+                         eval_store_path=str(store_path))
+    assert spec_b.eval_signature() != spec_a.eval_signature()
+    res_b = run_study(spec_b, out=tmp_path / "b.jsonl")
+    assert res_b.store_preloaded == 0
+    assert res_b.store_persisted > 0
+
+    # ...while a search-shape change (steps/agents) still shares entries
+    spec_c = _train_spec(steps=4, batch_size=2, agents=("rw",),
+                         eval_store_path=str(store_path))
+    assert spec_c.eval_signature() == spec_a.eval_signature()
+    assert run_study(spec_c, out=tmp_path / "c.jsonl").store_preloaded > 0
+
+
+def test_persistent_eval_store_survives_torn_tail(tmp_path):
+    store_path = tmp_path / "evals.jsonl"
+    spec = _train_spec(steps=6, batch_size=3,
+                       eval_store_path=str(store_path))
+    run_study(spec, out=tmp_path / "a.jsonl")
+    with store_path.open("a") as f:
+        f.write('{"sig": "torn')  # killed mid-append
+    res = run_study(spec, out=tmp_path / "b.jsonl")
+    assert res.store_preloaded > 0 and res.store_misses == 0
+
+
+# ---------------------------------------------------------------------------
+# (h) the results-comparison CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_compare_results_files(tmp_path, capsys):
+    from repro.dse import main
+
+    spec_path = tmp_path / "s.json"
+    _train_spec(steps=8, batch_size=4, agents=("ga", "rw")).to_json(spec_path)
+    a, b = tmp_path / "a.jsonl", tmp_path / "b.jsonl"
+    assert main(["run", str(spec_path), "--out", str(a), "--quiet"]) == 0
+    assert main(["run", str(spec_path), "--out", str(b), "--quiet"]) == 0
+    capsys.readouterr()
+
+    assert main(["compare", str(a), str(b)]) == 0
+    got = capsys.readouterr()
+    assert "0:ga:s0" in got.out and "1:rw:s0" in got.out
+    assert "winner: tie" in got.out          # identical campaigns
+    assert "warning" not in got.err          # same spec hash
+
+    # a different study into b -> hash-mismatch warning + a winner
+    b2 = tmp_path / "b2.jsonl"
+    spec2 = tmp_path / "s2.json"
+    _train_spec(steps=12, batch_size=4, agents=("ga", "rw"),
+                seeds=(1,)).to_json(spec2)
+    assert main(["run", str(spec2), "--out", str(b2), "--quiet"]) == 0
+    capsys.readouterr()
+    assert main(["compare", str(a), str(b2)]) == 0
+    got = capsys.readouterr()
+    assert "spec hashes differ" in got.err
+    assert "winner:" in got.out
+
+    assert main(["compare", str(a), str(tmp_path / "missing.jsonl")]) == 2
