@@ -43,22 +43,30 @@ def dse_throughput(steps: int = 500, arch: str = "gpt3-13b") -> tuple[float, flo
     return seq, batched
 
 
-def backend_throughput(points: int = 32) -> "tuple[float, float] | None":
-    """(reference, jax) points/sec evaluating one agent population of
-    collective/network stacks over a LARGE pipelined request-stream trace —
-    the acceptance measurement for the backend API.  Both paths run through
-    ``CosmicEnv.step_batch`` (the PR-1 batched engine); the jax row swaps
+BACKEND_ROW_ORDER = ("reference", "jax-unfused", "jax")
+
+
+def backend_throughput(points: int = 32, n_requests: int = 256,
+                       repeats: int = 3) -> "list[dict] | None":
+    """Points/sec per simulation backend (reference / jax-unfused / jax)
+    evaluating one agent population of collective/network stacks over a
+    LARGE pipelined request-stream trace — the acceptance measurement for
+    the backend API and the fused-evaluation path.  All rows run through
+    ``CosmicEnv.step_batch`` (the PR-1 batched engine); the jax rows swap
     the per-point heapq event loop for one shared-plan ``simulate_batch``
-    sweep.  None when jax is unavailable."""
-    from repro.core.backends import backend_available
+    sweep, and the fused ``jax`` row additionally prices all durations
+    inside the same compiled call.  Each row carries the backend's
+    duration-pass vs compiled-sweep wall split (``last_timings``) so the
+    bottleneck claim stays measurable.  None when jax is unavailable."""
+    from repro.core.backends import backend_available, get_backend
     from repro.core.scenario import RequestStreamScenario
 
     if not backend_available("jax"):
         return None
-    # 256 Poisson requests through disaggregated pools -> a ~26k-op
-    # pipelined multi-wave trace; trace-shaping knobs are pinned so the
-    # whole population shares ONE scheduling plan
-    scenario = RequestStreamScenario(n_requests=256, seq=2048,
+    # n_requests=256 Poisson requests through disaggregated pools -> a
+    # ~26k-op pipelined multi-wave trace; trace-shaping knobs are pinned so
+    # the whole population shares ONE scheduling plan
+    scenario = RequestStreamScenario(n_requests=n_requests, seq=2048,
                                      decode_tokens=64, rate_rps=32.0, seed=0)
     pinned = dict(dp=8, sp=1, pp=1, weight_sharded=0,
                   topology=("ring", "fc", "ring", "switch"),
@@ -77,17 +85,51 @@ def backend_throughput(points: int = 32) -> "tuple[float, float] | None":
             multidim_coll=str(rng.choice(("baseline", "blueconnect"))),
             bw_per_dim=tuple(int(b) for b in
                              rng.choice(range(50, 501, 50), size=4))))
-    rates = []
-    for backend in ("reference", "jax"):
+    rows = []
+    for backend in BACKEND_ROW_ORDER:
         env = make_env("qwen2-1.5b", "system2", scenario=scenario,
                        objective="goodput", backend=backend)
         # warm trace caches + compile the sweep at the population shape
         env.step_batch(cfgs)
-        env.clear_memo()
-        t0 = time.time()
-        env.step_batch(cfgs)
-        rates.append(len(cfgs) / (time.time() - t0))
-    return rates[0], rates[1]
+        best = float("inf")
+        for _ in range(1 if backend == "reference" else repeats):
+            env.clear_memo()
+            t0 = time.time()
+            env.step_batch(cfgs)
+            best = min(best, time.time() - t0)
+        timings = getattr(get_backend(backend), "last_timings", {})
+        rows.append({
+            "backend": backend, "points": points, "n_requests": n_requests,
+            "pts_per_s": len(cfgs) / best, "ms_per_gen": best * 1e3,
+            "durations_ms": timings.get("durations_s", float("nan")) * 1e3,
+            "sweep_ms": timings.get("sweep_s", float("nan")) * 1e3,
+        })
+    return rows
+
+
+def backend_rows(points: int = 32, n_requests: int = 256) -> list[tuple]:
+    """The ``backend_throughput`` measurement as emit()-able benchmark rows
+    (one per backend plus a speedup summary) — also the payload of the
+    ``BENCH_backends.json`` perf-trajectory artifact."""
+    bt = backend_throughput(points=points, n_requests=n_requests)
+    if bt is None:
+        return [("backend_throughput", 0.0, "jax_unavailable")]
+    rows = []
+    for r in bt:
+        rows.append((f"backend_throughput[{r['backend']}]", 0.0,
+                     f"pts_per_s={r['pts_per_s']:.1f} "
+                     f"ms_per_gen={r['ms_per_gen']:.1f} "
+                     f"durations_ms={r['durations_ms']:.1f} "
+                     f"sweep_ms={r['sweep_ms']:.1f} "
+                     f"points={r['points']} n_requests={r['n_requests']}"))
+    by = {r["backend"]: r["pts_per_s"] for r in bt}
+    rows.append(("backend_throughput", 0.0,
+                 f"ref_pts_per_s={by['reference']:.1f} "
+                 f"jax_pts_per_s={by['jax-unfused']:.1f} "
+                 f"fused_pts_per_s={by['jax']:.1f} "
+                 f"fused_vs_ref=x{by['jax'] / max(by['reference'], 1e-9):.2f} "
+                 f"fused_vs_jax=x{by['jax'] / max(by['jax-unfused'], 1e-9):.2f}"))
+    return rows
 
 
 def agents_study(steps: int) -> StudySpec:
@@ -126,11 +168,7 @@ def run(steps: int | None = None) -> list[tuple]:
     rows.append(("dse_throughput", 0.0,
                  f"seq_pts_per_s={seq:.0f} batched_pts_per_s={batched:.0f} "
                  f"speedup=x{batched / max(seq, 1e-9):.2f}"))
-    bt = backend_throughput()
-    rows.append(("backend_throughput", 0.0,
-                 "jax_unavailable" if bt is None else
-                 f"ref_pts_per_s={bt[0]:.1f} jax_pts_per_s={bt[1]:.1f} "
-                 f"speedup=x{bt[1] / max(bt[0], 1e-9):.2f}"))
+    rows.extend(backend_rows())
     return rows
 
 

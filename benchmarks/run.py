@@ -1,24 +1,50 @@
 """Benchmark harness — one module per paper table/figure + the roofline.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig6,roofline] [--steps N]
+    PYTHONPATH=src python -m benchmarks.run --only backends --json BENCH_backends.json
     PYTHONPATH=src python -m benchmarks.run --study study.json [--resume]
 
 Prints ``name,us_per_call,derived`` CSV (us_per_call = mean simulator/DSE
-step cost where applicable).  The DSE-driven modules (fig10, serve) run as
-declarative studies; ``--study`` forwards an arbitrary serialized
-``StudySpec`` to the ``repro.dse`` campaign runner.
+step cost where applicable).  ``--json PATH`` additionally writes the same
+rows as a machine-readable artifact (``derived``'s ``k=v`` tokens parsed
+into fields) — the perf-trajectory record CI uploads for the ``backends``
+module.  The DSE-driven modules (fig10, serve) run as declarative studies;
+``--study`` forwards an arbitrary serialized ``StudySpec`` to the
+``repro.dse`` campaign runner.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+
+
+def _derived_fields(derived: str) -> dict:
+    """Parse a row's ``k=v`` derived tokens (the repo-wide convention) into
+    a dict, keeping floats numeric; bare tokens land under ``note``."""
+    out: dict = {}
+    notes = []
+    for tok in str(derived).split():
+        if "=" in tok:
+            k, v = tok.split("=", 1)
+            try:
+                out[k] = float(v.lstrip("x"))
+            except ValueError:
+                out[k] = v
+        else:
+            notes.append(tok)
+    if notes:
+        out["note"] = " ".join(notes)
+    return out
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="comma-separated module list")
     ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the emitted rows as a JSON artifact")
     ap.add_argument("--study", default=None,
                     help="run a StudySpec JSON via repro.dse instead of the "
                          "benchmark modules")
@@ -40,6 +66,8 @@ def main() -> None:
                             serve_scenarios, table6_codesign)
     from benchmarks.common import emit
 
+    import os
+
     modules = {
         "fig4": lambda: fig4_spread.run(args.steps),
         "fig6": lambda: fig6_fullstack.run(args.steps),
@@ -49,18 +77,33 @@ def main() -> None:
         "serve": lambda: serve_scenarios.run(args.steps),
         "roofline": lambda: roofline.run(),
         "calibration": lambda: calibration.run(),
+        # the backend perf-trajectory rows alone (trace size scales with
+        # BENCH_BACKEND_REQUESTS so CI can run a small-trace variant)
+        "backends": lambda: fig10_agents.backend_rows(
+            n_requests=int(os.environ.get("BENCH_BACKEND_REQUESTS", "256"))),
     }
     only = [m.strip() for m in args.only.split(",") if m.strip()]
-    todo = only or list(modules)
+    todo = only or [m for m in modules if m != "backends"]
 
     print("name,us_per_call,derived")
     t0 = time.time()
+    all_rows: list[tuple] = []
     for name in todo:
         if name not in modules:
             print(f"unknown benchmark {name!r}; known: {sorted(modules)}", file=sys.stderr)
             raise SystemExit(2)
-        emit(modules[name]())
-    print(f"# total wall: {time.time() - t0:.1f}s", file=sys.stderr)
+        rows = modules[name]()
+        all_rows.extend(rows)
+        emit(rows)
+    wall = time.time() - t0
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"modules": todo, "wall_s": round(wall, 2),
+                       "rows": [{"name": n, "us_per_call": us,
+                                 **_derived_fields(d)}
+                                for n, us, d in all_rows]}, f, indent=2)
+        print(f"# wrote {args.json}", file=sys.stderr)
+    print(f"# total wall: {wall:.1f}s", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,4 +1,5 @@
-"""JaxBackend: a jit+vmap-compiled levelized sweep over the dependency DAG.
+"""JaxBackend: a jit+vmap-compiled levelized sweep over the dependency DAG,
+optionally fused with the batched duration pass into one compiled call.
 
 The reference event loop is inherently sequential per design point.  This
 backend lowers the shared ``_SimPlan`` into a fixed-structure longest-path
@@ -15,10 +16,26 @@ augmented with per-resource chain edges::
     finish[i] = dur[i] + max(finish[j] for j in deps[i] + {prev_on_res[i]})
 
 The augmented-parent table is static per trace (built once, piggybacked on
-the plan); the per-design-point durations (vectorized roofline + memoized
-collective model, shared with the reference backend via
-``simulator.plan_durations``) are the ONLY population-varying input, so the
-compiled sweep is reused across every design point of the search.
+the plan).  The per-design-point durations are the ONLY population-varying
+input, and they come in two flavours:
+
+  * FUSED (default): ``simulator.plan_duration_tables`` packs the whole
+    population's collective dim tables + roofline coefficients host-side
+    (memoized per design-point key), and one jit-compiled function per plan
+    prices every duration class x population member with the vectorized
+    collective evaluator (``collectives.multidim_collective_time_vec``) and
+    feeds the durations straight into the scheduling sweep — no host
+    round-trip between pricing and scheduling.
+  * UNFUSED (``JaxBackend(fused=False)``, registered as ``jax-unfused``):
+    the scalar per-call duration pass (vectorized roofline + memoized
+    scalar collective model via ``simulator.plan_durations``) feeding the
+    compiled sweep — the pre-fusion behaviour, kept as the measurable
+    baseline for the duration-pass-vs-sweep time split.
+
+``last_timings`` records the split after every ``simulate_batch``:
+``durations_s`` (host-side duration pass: the scalar loop when unfused, the
+memoized table packing when fused) and ``sweep_s`` (the compiled evaluation
+— pricing + sweep together when fused).
 
 Fidelity: each resource serializes its ops in issue order instead of the
 reference loop's arrival-order (FIFO) / freshest-first (LIFO) queue
@@ -30,6 +47,7 @@ populations over large traces.
 """
 from __future__ import annotations
 
+import time
 from collections.abc import Mapping
 from typing import Any, Sequence
 
@@ -40,7 +58,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.simulator import (SimResult, SystemConfig, _SimPlan,
-                                  build_sim_result, plan_durations)
+                                  batch_op_durations, build_sim_result,
+                                  plan_duration_tables, plan_durations)
 from repro.core.workload import Parallelism, Trace
 
 
@@ -61,7 +80,11 @@ def _sweep_population(dur_t: jnp.ndarray,
             fin = finish[parents_pad[i]].max() + d[i]
             return finish.at[i].set(fin)
 
-        return lax.fori_loop(0, n_ops, body, jnp.zeros(n_ops + 1, d.dtype))
+        # modest unroll amortizes the while-loop dispatch overhead that
+        # dominates this intrinsically sequential recurrence (~12% on the
+        # 26k-op request-stream trace; measured 4/8/16/32, 16 is best)
+        return lax.fori_loop(0, n_ops, body, jnp.zeros(n_ops + 1, d.dtype),
+                             unroll=16)
 
     return jax.vmap(one, in_axes=1, out_axes=1)(dur_t)
 
@@ -103,6 +126,26 @@ def _x64():
     return jax.experimental.enable_x64()
 
 
+def _fused_eval(plan: _SimPlan):
+    """The per-plan fused kernel: population duration tables in, per-op
+    durations AND finish times out, one jit-compiled call.
+
+    Compiled per plan (the plan's scatter index arrays are closure
+    constants, so the function identity must be plan-specific) and cached
+    on it; XLA re-specializes per (population size, padded dim count) —
+    both stable across the generations of a search."""
+    fn = plan.pack_memo.get("_fused")
+    if fn is None:
+        def fused(tables, parents):
+            # op-major durations feed the sweep with contiguous per-op rows
+            # (the loop body reads one row per step) and ship to host
+            # without a transpose — busy accounting scatters op-major too
+            dur_t = batch_op_durations(plan, tables, xp=jnp, op_major=True)
+            return dur_t, _sweep_population(dur_t, parents)
+        fn = plan.pack_memo["_fused"] = jax.jit(fused)
+    return fn
+
+
 class FinishTimes(Mapping):
     """``SimResult.op_finish_us`` backed by the sweep's finish row — dict
     semantics (uid -> finish time) without materializing tens of thousands
@@ -129,10 +172,21 @@ class FinishTimes(Mapping):
 
 
 class JaxBackend:
-    """Population-vectorized scheduling on the XLA-compiled levelized sweep."""
+    """Population-vectorized scheduling on the XLA-compiled levelized sweep.
 
-    name = "jax"
+    ``fused=True`` (the default, registered as ``jax``) prices durations
+    inside the same compiled call as the sweep; ``fused=False`` (registered
+    as ``jax-unfused``) keeps the scalar per-call duration pass feeding the
+    sweep — the measurable pre-fusion baseline."""
+
     vectorized = True
+
+    def __init__(self, fused: bool = True) -> None:
+        self.fused = fused
+        self.name = "jax" if fused else "jax-unfused"
+        # duration-pass vs compiled-evaluation wall-time split of the most
+        # recent simulate_batch (see module docstring)
+        self.last_timings: dict[str, float] = {}
 
     def simulate(self, trace: Trace, cfg: SystemConfig, par: Parallelism, *,
                  pools: dict[int, Any] | None = None,
@@ -149,25 +203,57 @@ class JaxBackend:
                        calls: Sequence[Any]) -> list[SimResult]:
         if not calls:
             return []
-        plans_durs = [plan_durations(trace, c.cfg, c.par, c.pools)
-                      for c in calls]
-        plan = plans_durs[0][0]
-        parents = _plan_parents(trace, plan)
-        dur = np.asarray([d for _, d in plans_durs], dtype=np.float64)
-        with _x64():
-            finish = np.asarray(_sweep_population(
-                jnp.asarray(dur.T), jnp.asarray(parents)))[:plan.n_ops].T
+        t0 = time.perf_counter()
+        if self.fused:
+            plan, tables = plan_duration_tables(trace, calls)
+            parents = plan.pack_memo.get("_parents_dev")
+            t1 = time.perf_counter()
+            with _x64():
+                if parents is None:
+                    # keep the static parent table resident on device — it
+                    # is the same every batch and re-uploading it costs
+                    # more than the entire class-table pack
+                    parents = jnp.asarray(_plan_parents(trace, plan))
+                    plan.pack_memo["_parents_dev"] = parents
+                dur_d, finish_d = _fused_eval(plan)(tables, parents)
+                dur = np.asarray(dur_d).T    # (P, n_ops) view, op-major data
+                finish = np.asarray(finish_d)[:plan.n_ops].T
+        else:
+            plans_durs = [plan_durations(trace, c.cfg, c.par, c.pools)
+                          for c in calls]
+            plan = plans_durs[0][0]
+            parents = _plan_parents(trace, plan)
+            dur = np.asarray([d for _, d in plans_durs], dtype=np.float64)
+            t1 = time.perf_counter()
+            with _x64():
+                finish = np.asarray(_sweep_population(
+                    jnp.asarray(dur.T), jnp.asarray(parents)))[:plan.n_ops].T
+        t2 = time.perf_counter()
+        self.last_timings = {"durations_s": t1 - t0, "sweep_s": t2 - t1}
         makespan = finish.max(axis=1) if plan.n_ops else np.zeros(len(calls))
         res_of = np.asarray(plan.res_of, dtype=np.intp)
         n_res = len(plan.res_names)
+        # whole-population busy accounting in one 2D scatter over
+        # (population, resource).  Either broadcast orientation accumulates
+        # each (member, resource) cell in increasing-uid order — the same
+        # order as the per-call np.bincount it replaces — so every row is
+        # bit-identical; iterate the orientation matching the duration
+        # matrix's memory layout (op-major from the fused kernel)
+        busy2d = np.zeros((len(calls), n_res), dtype=np.float64)
+        if self.fused:
+            np.add.at(busy2d.T,
+                      (res_of[:, None],
+                       np.arange(len(calls))[None, :]), dur.T)
+        else:
+            np.add.at(busy2d,
+                      (np.arange(len(calls))[:, None], res_of[None, :]), dur)
         out: list[SimResult] = []
         for k, call in enumerate(calls):
-            busy = np.bincount(res_of, weights=dur[k], minlength=n_res)
             fin: Mapping = {}
             if call.record_per_op or call.record_finish:
                 fin = FinishTimes(finish[k])
             out.append(build_sim_result(
-                plan, makespan=float(makespan[k]), busy=busy.tolist(),
+                plan, makespan=float(makespan[k]), busy=busy2d[k].tolist(),
                 dur=dur[k], finish=fin,
                 record_per_op=call.record_per_op))
         return out

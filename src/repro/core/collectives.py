@@ -7,18 +7,71 @@ effective_bw folds in (i) how many of the NPU's links the algorithm can
 drive concurrently on the given topology and (ii) congestion when the
 algorithm's traffic pattern doesn't match the physical links (e.g. Direct
 on a ring incurs multi-hop forwarding).
+
+Two evaluation paths share one set of coefficient tables:
+
+  * the SCALAR path (``collective_time_us`` / ``multidim_collective_time_us``)
+    — the memoized per-design-point oracle the reference backend prices
+    with, bit-identical to the original branchy implementation;
+  * the VECTORIZED path (``collective_time_vec`` /
+    ``multidim_collective_time_vec``) — the same model over arrays of
+    integer ids (kind/algo/topo_kind) and float dims, evaluating whole
+    populations x duration-classes in one shot.  ``xp`` selects the array
+    module (numpy, or ``jax.numpy`` so the fused backend can price inside
+    jit).  With a host-exact ``scale`` table the numpy path reproduces the
+    scalar path bit for bit; without one it matches to the last couple of
+    ulps (cumprod vs sequential division).
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
 from typing import Sequence
 
+import numpy as np
+
 from repro.core.cache import switchable_lru_cache
-from repro.core.topology import Network, TopoDim
+from repro.core.topology import TOPO_KINDS, Network, TopoDim
 
 ALGOS = ("ring", "direct", "rhd", "dbt")
 COLL_KINDS = ("all_reduce", "all_gather", "reduce_scatter", "all_to_all")
+
+# -- integer ids: the gather keys of the vectorized evaluator ---------------
+ALGO_IDS = {a: i for i, a in enumerate(ALGOS)}
+COLL_KIND_IDS = {k: i for i, k in enumerate(COLL_KINDS)}
+TOPO_KIND_IDS = {t: i for i, t in enumerate(TOPO_KINDS)}  # ring/switch/fc
+
+_AR = COLL_KIND_IDS["all_reduce"]
+_A2A = COLL_KIND_IDS["all_to_all"]
+_RING_A, _DIRECT_A, _RHD_A, _DBT_A = (ALGO_IDS[a] for a in ALGOS)
+_RING_T, _SWITCH_T, _FC_T = (TOPO_KIND_IDS[t] for t in TOPO_KINDS)
+
+# -- coefficient tables ------------------------------------------------------
+# Plain-float tuples feed the scalar path (no numpy scalars on the memoized
+# hot path); the numpy arrays the vectorized evaluator gathers from are
+# built FROM them so the two paths cannot diverge.
+# per-NPU concurrently-driven links, [topo_kind_id][algo_id];
+# -1 marks the n-dependent entry (Direct on fully-connected drives n-1)
+_LINKS = (
+    # ring   direct  rhd   dbt
+    (1.0,    1.0,    1.0,  2.0),   # ring topology
+    (1.0,    1.0,    1.0,  1.0),   # switch (NIC-bound for every algorithm)
+    (1.0,   -1.0,    1.0,  2.0),   # fully connected
+)
+# serialized-rounds multiplier per collective kind (all-reduce pays a
+# reduce-scatter pass plus an all-gather pass); the per-pass round count is
+# the algo selector: ring -> n-1, direct -> 1, rhd/dbt -> ceil(log2 n)
+_KIND_STEP_MULT = (2.0, 1.0, 1.0, 1.0)
+# injection-port bytes multiplier per kind: AR = 2M(n-1)/n, rest = M(n-1)/n
+_KIND_WIRE_MULT = (2.0, 1.0, 1.0, 1.0)
+
+_LINKS_TABLE = np.array(_LINKS)
+_KIND_STEP_MULT_ARR = np.array(_KIND_STEP_MULT)
+_KIND_WIRE_MULT_ARR = np.array(_KIND_WIRE_MULT)
+
+
+def _ceil_log2(n: int) -> int:
+    """ceil(log2(n)) for n >= 1, exactly (bit tricks, no libm)."""
+    return max(n - 1, 0).bit_length() if n > 1 else 0
 
 
 def _steps(algo: str, kind: str, n: int) -> float:
@@ -45,19 +98,14 @@ def _wire_bytes(kind: str, n: int, size: float) -> float:
     if n <= 1:
         return 0.0
     frac = (n - 1) / n
-    return (2.0 if kind == "all_reduce" else 1.0) * size * frac
+    return _KIND_WIRE_MULT[COLL_KIND_IDS[kind]] * size * frac
 
 
 def _parallel_links(algo: str, topo_kind: str, n: int) -> float:
-    """How many links per NPU the algorithm drives concurrently."""
-    if topo_kind == "ring":
-        # ring topology: 2 neighbour links; ring algo streams through 1 tx
-        # (bidirectional rings can split ~2x, halved by turnaround overheads)
-        return {"ring": 1.0, "direct": 1.0, "rhd": 1.0, "dbt": 2.0}[algo]
-    if topo_kind == "switch":
-        return 1.0  # NIC-bound through the switch for every algorithm
-    # fully connected: direct/A2A-style patterns drive all n-1 links
-    return {"ring": 1.0, "direct": float(n - 1), "rhd": 1.0, "dbt": 2.0}[algo]
+    """How many links per NPU the algorithm drives concurrently (the
+    ``_LINKS_TABLE`` coefficient; -1 marks the n-dependent fc/direct entry)."""
+    v = _LINKS_TABLE[TOPO_KIND_IDS[topo_kind], ALGO_IDS[algo]]
+    return float(n - 1) if v < 0 else float(v)
 
 
 def _congestion(algo: str, topo_kind: str, n: int) -> float:
@@ -159,3 +207,109 @@ def _multidim_collective_time_impl(kind: str, size_bytes: float, net: Network,
 
 _multidim_collective_time_cached = \
     switchable_lru_cache(maxsize=131072)(_multidim_collective_time_impl)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized evaluator: the same model over arrays of integer ids
+# ---------------------------------------------------------------------------
+
+def _vec_ceil_log2(n, xp):
+    """ceil(log2(n)) for float arrays of integers, exactly: the exponent of
+    frexp(n - 1) is bit_length(n - 1), with no libm rounding to worry about.
+    Returns 1 where n <= 2 (callers only consume lg through congestion /
+    rhd-dbt step counts, which are guarded there)."""
+    _, e = xp.frexp(xp.maximum(n - 1.0, 1.0))
+    return xp.maximum(e.astype(xp.float64), 1.0)
+
+
+def collective_time_vec(kind_id, size_bytes, npus, bw, latency_us, topo_id,
+                        algo_id, chunks, *, xp=np):
+    """Elementwise ``collective_time_us`` over arrays.
+
+    All arguments broadcast together; ids are integer arrays indexing the
+    coefficient tables (``COLL_KIND_IDS`` / ``ALGO_IDS`` / ``TOPO_KIND_IDS``),
+    the rest are float64 arrays.  Entries with ``npus <= 1`` or
+    ``size_bytes <= 0`` evaluate to 0, so padded dim slots are free."""
+    n = xp.asarray(npus, dtype=xp.float64)
+    size = xp.asarray(size_bytes, dtype=xp.float64)
+    c = xp.maximum(xp.asarray(chunks, dtype=xp.float64), 1.0)
+    lat = xp.asarray(latency_us, dtype=xp.float64)
+    kind_id = xp.asarray(kind_id)
+    algo_id = xp.asarray(algo_id)
+    topo_id = xp.asarray(topo_id)
+
+    lg = _vec_ceil_log2(n, xp)
+    # latency term: per-pass rounds selected by algo, doubled for all-reduce
+    per_pass = xp.where(algo_id == _RING_A, n - 1.0,
+                        xp.where(algo_id == _DIRECT_A, 1.0, lg))
+    steps = per_pass * xp.asarray(_KIND_STEP_MULT)[kind_id] * c
+    # bandwidth term: injection-port bytes over effective bandwidth
+    frac = (n - 1.0) / n
+    wire = xp.asarray(_KIND_WIRE_MULT)[kind_id] * size * frac
+    links = xp.asarray(_LINKS_TABLE)[topo_id, algo_id]
+    links = xp.where(links < 0, n - 1.0, links)
+    on_ring = topo_id == _RING_T
+    cong = xp.ones_like(n)
+    cong = xp.where(on_ring & (algo_id == _DIRECT_A), n / 4.0, cong)
+    cong = xp.where(on_ring & (algo_id == _RHD_A),
+                    xp.maximum(1.0, (n / 2.0) / lg), cong)
+    cong = xp.where(on_ring & (algo_id == _DBT_A),
+                    xp.maximum(1.0, n / (2.0 * lg)), cong)
+    cong = xp.where(n <= 2.0, 1.0, cong)
+    eff_bw = bw * links / cong
+    t = steps * lat + (wire / eff_bw) * 1e-3
+    return xp.where((n > 1.0) & (size > 0.0), t, 0.0)
+
+
+def multidim_collective_time_vec(kind_id, size_bytes, npus, bw, latency_us,
+                                 topo_id, algo_id, chunks, blueconnect, *,
+                                 scale=None, xp=np):
+    """Vectorized ``multidim_collective_time_us`` over padded dim tables.
+
+    The trailing axis is the (padded) dim axis: ``npus``/``bw``/
+    ``latency_us``/``topo_id``/``algo_id`` are ``(..., D)``; ``kind_id``,
+    ``size_bytes``, ``chunks`` and the boolean ``blueconnect`` (mode) are
+    ``(...)`` and broadcast.  Pad unused slots with ``npus = 1`` (carved
+    dims always have >= 2 NPUs, so real and padded slots can't collide).
+
+    ``scale`` optionally provides the hierarchical payload-shrinking table
+    ``(..., D)`` host-exactly (sequential division, as the scalar path
+    computes it) — the packed-table fast path passes it; when ``None`` it is
+    derived here via cumprod (equal to the last ulp).  All-to-all rows must
+    pass scale 1 (dimension-ordered routing moves the full payload per dim);
+    the internal derivation handles that, host-built tables must too.
+
+    Reductions over the dim axis are unrolled so the accumulation order
+    matches the scalar path's active-dims-in-order ``sum()``/``max()`` —
+    with a host-exact ``scale`` the numpy evaluation is bit-identical to
+    the (uncached) scalar model."""
+    n = xp.asarray(npus, dtype=xp.float64)
+    size = xp.asarray(size_bytes, dtype=xp.float64)[..., None]
+    kind = xp.asarray(kind_id)[..., None]
+    c = xp.maximum(xp.asarray(chunks, dtype=xp.float64), 1.0)
+    if scale is None:
+        inv = 1.0 / n
+        shifted = xp.cumprod(inv[..., :-1], axis=-1)
+        scale = xp.concatenate(
+            [xp.ones_like(inv[..., :1]), shifted], axis=-1)
+        scale = xp.where(kind == _A2A, 1.0, scale)
+    else:
+        scale = xp.asarray(scale, dtype=xp.float64)
+    phases = collective_time_vec(kind, size * scale, n, bw, latency_us,
+                                 topo_id, algo_id, c[..., None], xp=xp)
+    ndim = phases.shape[-1]
+    # unrolled reductions: padded slots contribute exact 0.0 terms
+    sum_p = phases[..., 0]
+    max_p = phases[..., 0]
+    base_sum = phases[..., 0] / c
+    for d in range(1, ndim):
+        p = phases[..., d]
+        sum_p = sum_p + p
+        max_p = xp.maximum(max_p, p)
+        base_sum = base_sum + p / c
+    active = xp.sum(n > 1.0, axis=-1)
+    blue = max_p + (sum_p - max_p) / c
+    base = base_sum + (c - 1.0) / c * max_p
+    multi = xp.where(xp.asarray(blueconnect, dtype=bool), blue, base)
+    # 0 or 1 active dims: no cross-dim pipelining — the bare phase (or 0)
+    return xp.where(active <= 1, sum_p, multi)

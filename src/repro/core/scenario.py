@@ -248,10 +248,40 @@ _serving_wave_trace_cached = \
     switchable_lru_cache(maxsize=512)(_serving_wave_trace_impl)
 
 
+def _wave_mark_index(trace: Trace):
+    """Flattened wave-mark tail uids + segment offsets, built once and
+    piggybacked on the (cached, immutable) trace so the per-evaluation read
+    is two fancy gathers instead of thousands of dict lookups."""
+    idx = getattr(trace, "_wave_mark_idx", None)
+    if idx is None:
+        first: list[int] = []
+        done: list[int] = []
+        off_f = [0]
+        off_d = [0]
+        for mk in trace.meta["wave_marks"]:
+            first.extend(mk["seg_tails"][1])
+            done.extend(mk["seg_tails"][-1])
+            off_f.append(len(first))
+            off_d.append(len(done))
+        idx = (np.asarray(first, dtype=np.intp), np.asarray(off_f[:-1]),
+               np.asarray(done, dtype=np.intp), np.asarray(off_d[:-1]))
+        trace._wave_mark_idx = idx
+    return idx
+
+
 def _wave_times_ms(trace: Trace, res: SimResult) -> list[tuple[float, float]]:
     """Per wave ``(first_token_ms, last_token_ms)`` completion times, read
     off the recorded op finish times through ``meta["wave_marks"]``."""
     fin = res.op_finish_us
+    row = getattr(fin, "_row", None)
+    if row is not None and trace.meta["wave_marks"]:
+        # vectorized backends expose the finish times as one array row:
+        # segment-max the tail uids instead of looping dict reads (reduceat
+        # takes the max over the same floats, so values are bit-identical)
+        uids_f, off_f, uids_d, off_d = _wave_mark_index(trace)
+        t_first = np.maximum.reduceat(row[uids_f], off_f) / 1e3
+        t_done = np.maximum.reduceat(row[uids_d], off_d) / 1e3
+        return list(zip(t_first.tolist(), t_done.tolist()))
     out = []
     for mk in trace.meta["wave_marks"]:
         t_first = max(fin[u] for u in mk["seg_tails"][1]) / 1e3
@@ -539,6 +569,45 @@ def _request_shapes_impl(n: int, seq: int, decode_tokens: int,
 _request_shapes_cached = switchable_lru_cache(maxsize=64)(_request_shapes_impl)
 
 
+@switchable_lru_cache(maxsize=1024)
+def _form_waves_cached(arrivals: tuple, window_ms: float,
+                       cap: int) -> tuple[tuple[tuple[int, ...], float], ...]:
+    """Queueing/admission memo: the wave grouping depends only on the
+    (cached) arrival process and two scenario knobs, so a population that
+    shares them — the common case in a search batch — forms waves once."""
+    waves: list[tuple[tuple[int, ...], float]] = []
+    cur: list[int] = []
+    deadline = 0.0
+    for i, t in enumerate(arrivals):
+        if cur and t > deadline:
+            waves.append((tuple(cur), deadline))
+            cur = []
+        cur.append(i)
+        if len(cur) == 1:
+            deadline = t + window_ms
+        if len(cur) == cap:
+            waves.append((tuple(cur), t))
+            cur = []
+    if cur:
+        waves.append((tuple(cur), deadline))
+    return tuple(waves)
+
+
+@switchable_lru_cache(maxsize=1024)
+def _wave_shapes_cached(shapes: tuple, waves: tuple) -> tuple:
+    return tuple((len(idxs), max(shapes[i][0] for i in idxs),
+                  max(shapes[i][1] for i in idxs)) for idxs, _ in waves)
+
+
+@switchable_lru_cache(maxsize=1024)
+def _wave_request_index(waves: tuple) -> tuple:
+    """Flattened admitted-request indices + per-wave counts for the
+    vectorized streaming-metrics pass."""
+    cat = np.asarray([i for idxs, _ in waves for i in idxs], dtype=np.intp)
+    counts = np.asarray([len(idxs) for idxs, _ in waves], dtype=np.intp)
+    return cat, counts
+
+
 @dataclass(frozen=True)
 class RequestStreamScenario:
     """Serving a request STREAM instead of one analytic batch: requests
@@ -635,15 +704,14 @@ class RequestStreamScenario:
         return bool(self.prompt_len_range or self.decode_len_range
                     or self.prompt_lens or self.decode_lens)
 
-    def _wave_shapes(self, waves: list[tuple[list[int], float]]) -> list[tuple[int, int, int]]:
+    def _wave_shapes(self, waves) -> tuple:
         """Per-wave ``(size, seq, decode_tokens)``: each wave pads to its
-        longest admitted prompt and chains to its longest decode."""
-        shapes = self.request_shapes()
-        return [(len(idxs), max(shapes[i][0] for i in idxs),
-                 max(shapes[i][1] for i in idxs)) for idxs, _ in waves]
+        longest admitted prompt and chains to its longest decode.  Memoized
+        with the wave grouping itself (see ``_wave_shapes_cached``)."""
+        return _wave_shapes_cached(self.request_shapes(), tuple(waves))
 
     def form_waves(self, window_ms: float,
-                   max_batch: int | None = None) -> list[tuple[list[int], float]]:
+                   max_batch: int | None = None) -> tuple:
         """Queueing/admission: group arrivals into waves of request indices.
         A wave opens at its first request, releases at ``open + window_ms``
         or the instant it fills to the admission cap; each ``(indices,
@@ -652,25 +720,10 @@ class RequestStreamScenario:
         ``max_batch`` overrides the scenario cap — ``evaluate`` passes the
         decode pool's resident capacity (``replicas * decode_batch``, itself
         capped by the scenario ``max_batch``) so an admitted wave never
-        exceeds what the decode pool can actually hold."""
+        exceeds what the decode pool can actually hold.  Memoized per
+        ``(arrivals, window, cap)`` — see ``_form_waves_cached``."""
         cap = self.max_batch if max_batch is None else max(1, max_batch)
-        arrivals = self.arrivals_ms()
-        waves: list[tuple[list[int], float]] = []
-        cur: list[int] = []
-        deadline = 0.0
-        for i, t in enumerate(arrivals):
-            if cur and t > deadline:
-                waves.append((cur, deadline))
-                cur = []
-            cur.append(i)
-            if len(cur) == 1:
-                deadline = t + window_ms
-            if len(cur) == cap:
-                waves.append((cur, t))
-                cur = []
-        if cur:
-            waves.append((cur, deadline))
-        return waves
+        return _form_waves_cached(self.arrivals_ms(), window_ms, cap)
 
     # -- pools (same carving as DisaggServeScenario) -----------------------
     def _pools(self, ctx: EnvContext) -> tuple[int, int]:
@@ -734,22 +787,28 @@ class RequestStreamScenario:
             res = results[0]
             arrivals = self.arrivals_ms()
             wave_shapes = self._wave_shapes(waves)
-            ttfts: list[float] = []
-            tpots: list[float] = []
-            lats: list[float] = []
-            for (idxs, _), (t_first, t_done), (_, _, wave_dec) in zip(
-                    waves, _wave_times_ms(tr, res), wave_shapes):
-                tpot = (t_done - t_first) / max(wave_dec - 1, 1)
-                for i in idxs:
-                    # a request finishes after ITS decode length at the
-                    # wave's token cadence (== t_done for the wave's longest
-                    # request)
-                    dec_i = shapes[i][1]
-                    done_i = t_done if dec_i == wave_dec \
-                        else t_first + tpot * (dec_i - 1)
-                    ttfts.append(t_first - arrivals[i])
-                    tpots.append(tpot)
-                    lats.append(done_i - arrivals[i])
+            wt = _wave_times_ms(tr, res)
+            # vectorized per-request metrics: same arithmetic as the
+            # per-request loop it replaces (one subtract / one fma-free
+            # multiply-add per request, identical operand order), flattened
+            # in (wave, admitted-index) order
+            t_first = np.asarray([t for t, _ in wt])
+            t_done = np.asarray([t for _, t in wt])
+            wave_dec = np.asarray([d for _, _, d in wave_shapes])
+            tpot_w = (t_done - t_first) / np.maximum(wave_dec - 1, 1)
+            cat, counts = _wave_request_index(tuple(waves))
+            dec_r = np.asarray([d for _, d in shapes])[cat]
+            t_first_r = np.repeat(t_first, counts)
+            tpot_r = np.repeat(tpot_w, counts)
+            # a request finishes after ITS decode length at the wave's
+            # token cadence (== t_done for the wave's longest request)
+            done_r = np.where(dec_r == np.repeat(wave_dec, counts),
+                              np.repeat(t_done, counts),
+                              t_first_r + tpot_r * (dec_r - 1))
+            arr_r = np.asarray(arrivals)[cat]
+            ttfts = t_first_r - arr_r
+            tpots = tpot_r
+            lats = done_r - arr_r
             horizon_ms = max(res.latency_ms, arrivals[-1])
             m = stream_metrics(ttfts, tpots, lats,
                                ttft_slo_ms=self.ttft_slo_ms,

@@ -27,7 +27,10 @@ from typing import Any, Sequence
 
 import numpy as np
 
-from repro.core.collectives import multidim_collective_time_us
+from repro.core.cache import switchable_lru_cache
+from repro.core.collectives import (ALGO_IDS, COLL_KIND_IDS, TOPO_KIND_IDS,
+                                    multidim_collective_time_us,
+                                    multidim_collective_time_vec)
 from repro.core.compute import Device
 from repro.core.topology import Network, TopoDim, carve_dims
 from repro.core.workload import Op, Parallelism, Trace
@@ -60,7 +63,8 @@ class SystemConfig:
                              f"known: {SCHED_POLICIES}")
 
 
-def group_dims(net: Network, par: Parallelism) -> dict[str, list[tuple[int, TopoDim]]]:
+@switchable_lru_cache(maxsize=4096)
+def group_dims(net: Network, par: Parallelism) -> dict[str, tuple[tuple[int, TopoDim], ...]]:
     """Map parallelism groups onto network dimensions, innermost first:
     TP gets the inner (fastest) dims, then EP(=TP group), SP, DP, PP.
 
@@ -72,11 +76,15 @@ def group_dims(net: Network, par: Parallelism) -> dict[str, list[tuple[int, Topo
     approximates the sub-ring/sub-switch.  A group factor sharing no
     divisor with any dim (non-power-of-two pools from disaggregated/
     partitioned scenarios) becomes a virtual dim at the outermost —
-    slowest — tier so its collectives are never free."""
+    slowest — tier so its collectives are never free.
+
+    Memoized on ``(net, par)`` (both frozen): populations revisit the same
+    mapping thousands of times per generation.  The returned dict is shared
+    across hits — treat it (and its tuple values) as immutable."""
     sizes = {"tp": par.tp, "sp": par.sp, "dp": par.dp, "pp": par.pp}
     cap = [d.npus for d in net.dims]  # consumed across groups, in order
-    out: dict[str, list[tuple[int, TopoDim]]] = {
-        grp: carve_dims(net.dims, cap, sizes[grp])
+    out: dict[str, tuple[tuple[int, TopoDim], ...]] = {
+        grp: tuple(carve_dims(net.dims, cap, sizes[grp]))
         for grp in ("tp", "sp", "dp", "pp")
     }
     out["ep"] = out["tp"]  # expert-parallel collectives ride the TP group
@@ -100,8 +108,20 @@ class SimResult:
         return self.makespan_us / 1e3
 
 
+@switchable_lru_cache(maxsize=16384)
+def _group_net_cached(coll_algo: tuple[str, ...],
+                      carved: tuple[tuple[int, TopoDim], ...],
+                      ) -> tuple[Network, tuple[str, ...]] | None:
+    if not carved:
+        return None
+    n_alg = len(coll_algo)
+    algos = tuple(coll_algo[min(i, n_alg - 1)] if n_alg else "ring"
+                  for i, _ in carved)
+    return Network(tuple(d for _, d in carved)), algos
+
+
 def _group_net(cfg: SystemConfig,
-               carved: list[tuple[int, TopoDim]]) -> tuple[Network, tuple[str, ...]] | None:
+               carved: Sequence[tuple[int, TopoDim]]) -> tuple[Network, tuple[str, ...]] | None:
     """Resolve one parallelism group's sub-network + per-dim algorithms.
 
     ``carved`` pairs each dim with its source physical dim index, so the
@@ -110,13 +130,11 @@ def _group_net(cfg: SystemConfig,
     (which handed DP/PP groups the inner dims' algorithms).  Residual
     virtual dims carry the outermost dim's index and therefore inherit its
     algorithm; indices beyond the configured tuple clamp to its last entry.
-    """
-    if not carved:
-        return None
-    n_alg = len(cfg.coll_algo)
-    algos = tuple(cfg.coll_algo[min(i, n_alg - 1)] if n_alg else "ring"
-                  for i, _ in carved)
-    return Network(tuple(d for _, d in carved)), algos
+
+    Memoized on ``(cfg.coll_algo, carved)`` — everything else on the config
+    is irrelevant to the resolution, so design points differing only in
+    chunks/policy/device hit the same entry."""
+    return _group_net_cached(cfg.coll_algo, tuple(carved))
 
 
 @dataclass
@@ -151,6 +169,9 @@ class _SimPlan:
     coll_repeat: np.ndarray             # per comm op: back-to-back repeats
     delay_ops: list[tuple[int, float]]  # (uid, delay_us)
     pools: tuple[int, ...]
+    # per-design-point packed duration tables, memoized on the plan keyed by
+    # (network, coll_algo, pool entries) — see _pack_class_tables
+    pack_memo: dict = field(default_factory=dict, repr=False)
 
 
 def _sim_plan(trace: Trace) -> _SimPlan:
@@ -276,8 +297,43 @@ def _op_durations(plan: _SimPlan, cfg: SystemConfig,
     return arr
 
 
+def _pool_entries(plan: _SimPlan, par: Parallelism,
+                  pools: dict[int, Any] | None) -> tuple[tuple[int, Any], ...]:
+    """Canonical, hashable form of the ``pools`` argument: one resolved
+    entry per pool the plan actually uses (pool values are Parallelism /
+    (Par, Net) / (Par, Net, dim_map) — all frozen/hashable)."""
+    if pools is None:
+        return tuple((p, par) for p in plan.pools)
+    return tuple((p, pools.get(p, par)) for p in plan.pools)
+
+
+@switchable_lru_cache(maxsize=4096)
+def _pool_group_dims_cached(network: Network,
+                            entries: tuple[tuple[int, Any], ...],
+                            ) -> dict[int, dict[str, tuple[tuple[int, TopoDim], ...]]]:
+    gdims_by_pool = {}
+    for p, entry in entries:
+        dim_map: tuple[int, ...] | None = None
+        if isinstance(entry, tuple):
+            if len(entry) == 3:
+                par_p, net_p, dim_map = entry
+            else:
+                par_p, net_p = entry
+        else:
+            par_p, net_p = entry, network
+        gd = group_dims(net_p, par_p)
+        if dim_map:
+            # carve indices are relative to the pool's sub-fabric; translate
+            # them to the parent fabric's physical dims for algo resolution
+            last = len(dim_map) - 1
+            gd = {g: tuple((dim_map[min(i, last)], d) for i, d in v)
+                  for g, v in gd.items()}
+        gdims_by_pool[p] = gd
+    return gdims_by_pool
+
+
 def pool_group_dims(plan: _SimPlan, cfg: SystemConfig, par: Parallelism,
-                    pools: dict[int, Any] | None) -> dict[int, dict[str, list[tuple[int, TopoDim]]]]:
+                    pools: dict[int, Any] | None) -> dict[int, dict[str, tuple[tuple[int, TopoDim], ...]]]:
     """Resolve every pool's parallelism-group -> carved-dims mapping.
 
     ``pools`` maps pool id -> that partition's Parallelism (default: every
@@ -287,29 +343,12 @@ def pool_group_dims(plan: _SimPlan, cfg: SystemConfig, par: Parallelism,
     Network, dim_map)`` value (``topology.sub_network_indexed``)
     additionally maps each sub-fabric dim back to its source physical dim so
     ``cfg.coll_algo`` is resolved against the dims the pool's traffic
-    actually rides."""
-    if pools is None:
-        pools = {p: par for p in plan.pools}
-    gdims_by_pool = {}
-    for p in plan.pools:
-        entry = pools.get(p, par)
-        dim_map: tuple[int, ...] | None = None
-        if isinstance(entry, tuple):
-            if len(entry) == 3:
-                par_p, net_p, dim_map = entry
-            else:
-                par_p, net_p = entry
-        else:
-            par_p, net_p = entry, cfg.network
-        gd = group_dims(net_p, par_p)
-        if dim_map:
-            # carve indices are relative to the pool's sub-fabric; translate
-            # them to the parent fabric's physical dims for algo resolution
-            last = len(dim_map) - 1
-            gd = {g: [(dim_map[min(i, last)], d) for i, d in v]
-                  for g, v in gd.items()}
-        gdims_by_pool[p] = gd
-    return gdims_by_pool
+    actually rides.
+
+    Memoized on ``(cfg.network, resolved pool entries)`` — populations reuse
+    a handful of carvings across thousands of calls.  The returned mapping
+    is shared across hits; treat it as immutable."""
+    return _pool_group_dims_cached(cfg.network, _pool_entries(plan, par, pools))
 
 
 def plan_durations(trace: Trace, cfg: SystemConfig, par: Parallelism,
@@ -319,6 +358,221 @@ def plan_durations(trace: Trace, cfg: SystemConfig, par: Parallelism,
     plan = _sim_plan(trace)
     return plan, _op_durations(plan, cfg, pool_group_dims(plan, cfg, par,
                                                           pools))
+
+
+# ---------------------------------------------------------------------------
+# Batched duration pass: price a whole population in one vectorized shot
+# ---------------------------------------------------------------------------
+
+def _class_static(plan: _SimPlan) -> dict[str, np.ndarray]:
+    """Design-point-independent per-class arrays (collective kind ids, class
+    payload sizes, the xfer mask) plus the delay-op scatter arrays — built
+    once per plan and reused by every batch."""
+    st = plan.pack_memo.get("static")
+    if st is None:
+        C = len(plan.coll_shapes)
+        kind_id = np.zeros(C, dtype=np.int32)
+        size = np.zeros(C, dtype=np.float64)
+        is_xfer = np.zeros(C, dtype=bool)
+        for i, (_pool, group, coll, sz) in enumerate(plan.coll_shapes):
+            # xfer classes price on the transfer lane, not the collective
+            # model; kind id 0 is a dead gather behind the is_xfer mask
+            kind_id[i] = 0 if group == "xfer" else COLL_KIND_IDS[coll]
+            size[i] = sz
+            is_xfer[i] = group == "xfer"
+        delay_uids = np.array([u for u, _ in plan.delay_ops], dtype=np.intp)
+        # permutation mapping op uid -> slot in the concatenated
+        # [zero | comp | coll | delay] duration-source axis: the batched
+        # pass GATHERS per-op durations through it instead of scattering
+        # three uid groups (XLA CPU scatters are an order of magnitude
+        # slower than one contiguous-row gather); slot 0 stays 0.0 for ops
+        # with no duration source
+        src = np.zeros(plan.n_ops, dtype=np.int32)
+        base = 1
+        for uids in (plan.comp_uids, plan.coll_uids, delay_uids):
+            src[np.asarray(uids, dtype=np.intp)] = \
+                base + np.arange(len(uids), dtype=np.int32)
+            base += len(uids)
+        st = {
+            "kind_id": kind_id, "size": size, "is_xfer": is_xfer,
+            "delay_uids": delay_uids,
+            "delay_us": np.array([d for _, d in plan.delay_ops],
+                                 dtype=np.float64),
+            "src_of_op": src,
+        }
+        plan.pack_memo["static"] = st
+    return st
+
+
+def _pack_class_tables(plan: _SimPlan, cfg: SystemConfig, par: Parallelism,
+                       pools: dict[int, Any] | None) -> dict[str, np.ndarray]:
+    """One design point's per-class dim tables, padded to this key's max
+    dim count: ``(C, D)`` arrays of npus / bw / latency_us / hierarchical
+    payload scale (float64) and topo-kind / algo ids (int32).
+
+    The carving is resolved once per ``(network, coll_algo, pool entries)``
+    and memoized on the plan — population members differing only in
+    chunks / mode / device / policy hit the same entry, and generations
+    revisit the same few entries.  Padded slots hold ``npus = 1`` (carved
+    dims always span >= 2 NPUs), which the vectorized collective evaluator
+    prices to an exact 0.  The ``scale`` column is the scalar path's
+    sequential-division payload shrinking, so pricing from these tables is
+    bit-identical to the memoized scalar model."""
+    entries = _pool_entries(plan, par, pools)
+    key = (cfg.network, cfg.coll_algo, entries)
+    cached = plan.pack_memo.get(key)
+    if cached is not None:
+        return cached
+    gdims = _pool_group_dims_cached(cfg.network, entries)
+    C = len(plan.coll_shapes)
+    rows: list[tuple[tuple[TopoDim, str], ...]] = []
+    D = 1
+    for pool, group, _coll, _sz in plan.coll_shapes:
+        resolved = None
+        if group != "xfer":
+            carved = gdims.get(pool, {}).get(group)
+            if carved:
+                resolved = _group_net(cfg, carved)
+        if resolved is None:
+            rows.append(())
+            continue
+        sub, algos = resolved
+        row = tuple(zip(sub.dims, algos))
+        rows.append(row)
+        D = max(D, len(row))
+    npus = np.ones((C, D), dtype=np.float64)
+    bw = np.ones((C, D), dtype=np.float64)
+    lat = np.zeros((C, D), dtype=np.float64)
+    scale = np.ones((C, D), dtype=np.float64)
+    topo = np.zeros((C, D), dtype=np.int32)
+    algo = np.zeros((C, D), dtype=np.int32)
+    for i, row in enumerate(rows):
+        a2a = plan.coll_shapes[i][2] == "all_to_all"
+        s = 1.0
+        for j, (d, a) in enumerate(row):
+            npus[i, j] = d.npus
+            bw[i, j] = d.bw
+            lat[i, j] = d.latency_us
+            topo[i, j] = TOPO_KIND_IDS[d.kind]
+            algo[i, j] = ALGO_IDS[a]
+            scale[i, j] = 1.0 if a2a else s
+            s /= d.npus
+    tab = {"npus": npus, "bw": bw, "lat": lat, "scale": scale,
+           "topo": topo, "algo": algo}
+    plan.pack_memo[key] = tab
+    return tab
+
+
+def plan_duration_tables(trace: Trace,
+                         calls: Sequence[Any]) -> tuple[_SimPlan, dict[str, np.ndarray]]:
+    """The batched analogue of ``plan_durations``'s inputs: the (cached)
+    plan plus one dict of packed numpy tables covering the whole population
+    — ``(P, C, D)`` per-class dim tables and ``(P,)`` per-call scalars
+    (roofline coefficients, chunks, mode, transfer-lane parameters).  The
+    tables are everything ``batch_op_durations`` needs, and they form a
+    flat pytree a jit-compiled consumer can take as one argument."""
+    plan = _sim_plan(trace)
+    tables = dict(_class_static(plan))
+    per = [_pack_class_tables(plan, c.cfg, c.par, c.pools) for c in calls]
+    P = len(calls)
+    C = len(plan.coll_shapes)
+    # pad the dim axis to a stable width: the padded-D value is a static
+    # shape for the jit-compiled consumer, and letting it flap between
+    # batches (4 vs 5 when a residual virtual dim appears) forces a
+    # recompile per flap — 6 covers every carve of a <=5-dim network
+    D = max(max((t["npus"].shape[1] for t in per), default=1), 6)
+    for name, fill, dtype in (("npus", 1.0, np.float64),
+                              ("bw", 1.0, np.float64),
+                              ("lat", 0.0, np.float64),
+                              ("scale", 1.0, np.float64),
+                              ("topo", 0, np.int32),
+                              ("algo", 0, np.int32)):
+        out = np.full((P, C, D), fill, dtype=dtype)
+        for k, t in enumerate(per):
+            a = t[name]
+            out[k, :, :a.shape[1]] = a
+        tables[name] = out
+    # per-call scalars, computed with the exact scalar-path expressions
+    tables["peak"] = np.array([c.cfg.device.peak_tflops * 1e12
+                               for c in calls], dtype=np.float64)
+    tables["membw"] = np.array([c.cfg.device.mem_bw_gbps * 1e9
+                                for c in calls], dtype=np.float64)
+    tables["chunks"] = np.array([float(c.cfg.chunks) for c in calls],
+                                dtype=np.float64)
+    tables["blue"] = np.array([c.cfg.multidim_coll == "blueconnect"
+                               for c in calls], dtype=bool)
+    tables["xfer_bw"] = np.array(
+        [c.cfg.xfer_bw if c.cfg.xfer_bw is not None
+         else (c.cfg.network.dims[-1].bw if c.cfg.network.dims else 1.0)
+         for c in calls], dtype=np.float64)
+    tables["xfer_lat"] = np.array([c.cfg.xfer_latency_us for c in calls],
+                                  dtype=np.float64)
+    return plan, tables
+
+
+def batch_op_durations(plan: _SimPlan, tables: dict[str, Any], *, xp=np,
+                       op_major: bool = False):
+    """Duration of every op for every population member: ``(P, n_ops)``
+    (or ``(n_ops, P)`` with ``op_major=True``).
+
+    The whole-population duration pass over ``plan_duration_tables`` output:
+    the roofline prices all compute ops x calls in one broadcast, the
+    vectorized collective evaluator prices all duration classes x calls in
+    one shot (transfer classes switch to the xfer lane model), and the
+    results route to op uids through one permutation gather (see
+    ``src_of_op`` in ``_class_static`` — XLA CPU scatters are far slower
+    than a contiguous-row gather, and op-major rows come out contiguous for
+    the scheduling sweep).  With ``xp=np`` each row is bit-identical to the
+    scalar ``plan_durations`` row for that call; with ``xp=jnp`` the same
+    code traces under jit so the fused backend prices durations on-device,
+    feeding the scheduling sweep without a host round-trip."""
+    P = int(tables["peak"].shape[0])
+    parts = [xp.zeros((1, P), dtype=xp.float64)]
+    if len(plan.comp_uids):
+        t_c = xp.asarray(plan.comp_flops)[:, None] / tables["peak"][None, :]
+        t_m = xp.asarray(plan.comp_bytes)[:, None] / tables["membw"][None, :]
+        parts.append(xp.maximum(t_c, t_m) * 1e6)           # (n_comp, P)
+    if plan.coll_shapes:
+        kind = xp.asarray(tables["kind_id"])[None, :]
+        size = xp.asarray(tables["size"])[None, :]
+        coll_t = multidim_collective_time_vec(
+            kind, size, tables["npus"], tables["bw"], tables["lat"],
+            tables["topo"], tables["algo"], tables["chunks"][:, None],
+            tables["blue"][:, None], scale=tables["scale"], xp=xp)
+        xfer_t = tables["xfer_lat"][:, None] \
+            + (size / tables["xfer_bw"][:, None]) * 1e-3
+        class_t = xp.where(xp.asarray(tables["is_xfer"])[None, :],
+                           xfer_t, coll_t)                 # (P, C)
+        if xp is not np:
+            # force the (P, C) class table to materialize before the per-op
+            # gather: XLA otherwise fuses the whole collective formula into
+            # the gather and re-evaluates it per (op, member) — turning a
+            # C x P pricing pass into an n_coll x P one (~150x here)
+            from jax import lax
+            class_t = lax.optimization_barrier(class_t)
+        parts.append(class_t.T[xp.asarray(plan.coll_class)]
+                     * xp.asarray(plan.coll_repeat)[:, None])  # (n_coll, P)
+    if plan.delay_ops:
+        parts.append(xp.broadcast_to(
+            xp.asarray(tables["delay_us"])[:, None],
+            (len(plan.delay_ops), P)))                     # (n_delay, P)
+    src = xp.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
+    if xp is not np:
+        # same fusion hazard as class_t above, and the barrier also pins a
+        # default layout so the host copy of the result is a plain memcpy
+        from jax import lax
+        src = lax.optimization_barrier(src)
+    dur_t = src[xp.asarray(tables["src_of_op"])]           # (n_ops, P)
+    return dur_t if op_major else dur_t.T
+
+
+def plan_durations_batch(trace: Trace,
+                         calls: Sequence[Any]) -> tuple[_SimPlan, np.ndarray]:
+    """Batched ``plan_durations``: the plan plus a ``(P, n_ops)`` float64
+    duration matrix, row ``k`` bit-identical to
+    ``plan_durations(trace, calls[k].cfg, calls[k].par, calls[k].pools)``."""
+    plan, tables = plan_duration_tables(trace, calls)
+    return plan, batch_op_durations(plan, tables, xp=np)
 
 
 def build_sim_result(plan: _SimPlan, *, makespan: float,

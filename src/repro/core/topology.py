@@ -12,6 +12,8 @@ import math
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, Sequence
 
+from repro.core.cache import switchable_lru_cache
+
 if TYPE_CHECKING:  # no runtime dep: compute.py never imports topology
     from repro.core.compute import Device
 
@@ -96,16 +98,25 @@ class Network:
         return sum(d.bw for d in self.dims)
 
 
-def build_network(topology: Sequence[str], npus_per_dim: Sequence[int],
-                  bw_per_dim: Sequence[float],
-                  latency_us: Sequence[float] | float = 0.5) -> Network:
-    if isinstance(latency_us, (int, float)):
-        latency_us = [float(latency_us)] * len(topology)
+@switchable_lru_cache(maxsize=8192)
+def _build_network_cached(topology: tuple, npus_per_dim: tuple,
+                          bw_per_dim: tuple, latency_us: tuple) -> Network:
     dims = tuple(
         TopoDim(t, int(n), float(b), float(l))
         for t, n, b, l in zip(topology, npus_per_dim, bw_per_dim, latency_us)
     )
     return Network(dims)
+
+
+def build_network(topology: Sequence[str], npus_per_dim: Sequence[int],
+                  bw_per_dim: Sequence[float],
+                  latency_us: Sequence[float] | float = 0.5) -> Network:
+    if isinstance(latency_us, (int, float)):
+        latency_us = (float(latency_us),) * len(topology)
+    # memoized: a search population re-resolves the same handful of fabric
+    # configs every generation (Network is frozen, so sharing is safe)
+    return _build_network_cached(tuple(topology), tuple(npus_per_dim),
+                                 tuple(bw_per_dim), tuple(latency_us))
 
 
 def carve_dims(dims: Sequence[TopoDim], caps: list[int],

@@ -309,12 +309,13 @@ def test_request_stream_wave_formation_golden():
                                max_batch=3)
     assert sc.arrivals_ms() == (10.0, 20.0, 30.0, 40.0, 50.0, 60.0)
     # wide window: waves fill to max_batch and release at the filling arrival
-    assert sc.form_waves(100.0) == [([0, 1, 2], 30.0), ([3, 4, 5], 60.0)]
+    assert sc.form_waves(100.0) == (((0, 1, 2), 30.0), ((3, 4, 5), 60.0))
     # 15ms window: pairs release at open+15
-    assert sc.form_waves(15.0) == [([0, 1], 25.0), ([2, 3], 45.0),
-                                   ([4, 5], 65.0)]
+    assert sc.form_waves(15.0) == (((0, 1), 25.0), ((2, 3), 45.0),
+                                   ((4, 5), 65.0))
     # no batching window: every request is its own wave, released on arrival
-    assert sc.form_waves(0.0) == [([i], 10.0 * (i + 1)) for i in range(6)]
+    assert sc.form_waves(0.0) == tuple(
+        ((i,), 10.0 * (i + 1)) for i in range(6))
 
 
 def test_request_stream_deterministic(clear_dse_caches):
