@@ -107,13 +107,65 @@ def backend_throughput(points: int = 32, n_requests: int = 256,
     return rows
 
 
+def verify_overhead_rows(n_requests: int = 256) -> list[tuple]:
+    """Static-verification cost vs a reference-backend evaluation on the
+    acceptance trace: the ISSUE-8 bound is overhead < 5%.  ``verify_ms``
+    re-derives the structural verdict + contextual checks each rep (the
+    per-evaluation steady state — the plan-level array views, built once
+    with the plan, stay amortized exactly like the plan itself);
+    ``memo_us`` is the memoized-report path every later evaluation of the
+    same trace pays.  Works without jax (reference backend only)."""
+    from repro.core.analysis import verify_trace
+    from repro.core.scenario import RequestStreamScenario
+    from repro.core.simulator import simulate
+
+    scenario = RequestStreamScenario(n_requests=n_requests, seq=2048,
+                                     decode_tokens=64, rate_rps=32.0, seed=0)
+    env = make_env("qwen2-1.5b", "system2", scenario=scenario,
+                   objective="goodput", backend="reference")
+    cfg = dict(dp=8, sp=1, pp=1, weight_sharded=0,
+               topology=("ring", "fc", "ring", "switch"),
+               npus_per_dim=(4, 8, 4, 8), bw_per_dim=(100, 200, 300, 400),
+               coll_algo=("ring", "direct", "rhd", "dbt"), chunks=4,
+               sched_policy="fifo", multidim_coll="baseline",
+               prefill_frac=0.5, decode_batch=8, batch_window_ms=50.0,
+               max_inflight=2)
+    job = env.scenario.sim_job(env.context(cfg))
+    call = job.calls[0]
+    simulate(call.trace, call.cfg, call.par, pools=call.pools)  # warm plan
+    verify_trace(call.trace, call.cfg, call.par, call.pools)
+    sim_s = float("inf")
+    for _ in range(3):
+        t0 = time.time()
+        simulate(call.trace, call.cfg, call.par, pools=call.pools)
+        sim_s = min(sim_s, time.time() - t0)
+    ver_s = float("inf")
+    for _ in range(5):
+        if hasattr(call.trace, "_verify_report"):
+            del call.trace._verify_report
+        t0 = time.time()
+        verify_trace(call.trace, call.cfg, call.par, call.pools)
+        ver_s = min(ver_s, time.time() - t0)
+    t0 = time.time()
+    for _ in range(100):
+        verify_trace(call.trace, call.cfg, call.par, call.pools)
+    memo_us = (time.time() - t0) / 100 * 1e6
+    return [("verify_overhead", ver_s * 1e6,
+             f"verify_ms={ver_s * 1e3:.3f} simulate_ms={sim_s * 1e3:.2f} "
+             f"overhead=x{ver_s / max(sim_s, 1e-12):.4f} "
+             f"memo_us={memo_us:.1f} n_ops={len(call.trace.ops)}")]
+
+
 def backend_rows(points: int = 32, n_requests: int = 256) -> list[tuple]:
     """The ``backend_throughput`` measurement as emit()-able benchmark rows
     (one per backend plus a speedup summary) — also the payload of the
-    ``BENCH_backends.json`` perf-trajectory artifact."""
+    ``BENCH_backends.json`` perf-trajectory artifact.  The static-analysis
+    overhead row rides along (it needs only the reference backend, so it
+    emits even where jax is unavailable)."""
     bt = backend_throughput(points=points, n_requests=n_requests)
     if bt is None:
-        return [("backend_throughput", 0.0, "jax_unavailable")]
+        return [("backend_throughput", 0.0, "jax_unavailable"),
+                *verify_overhead_rows(n_requests=n_requests)]
     rows = []
     for r in bt:
         rows.append((f"backend_throughput[{r['backend']}]", 0.0,
@@ -129,6 +181,7 @@ def backend_rows(points: int = 32, n_requests: int = 256) -> list[tuple]:
                  f"fused_pts_per_s={by['jax']:.1f} "
                  f"fused_vs_ref=x{by['jax'] / max(by['reference'], 1e-9):.2f} "
                  f"fused_vs_jax=x{by['jax'] / max(by['jax-unfused'], 1e-9):.2f}"))
+    rows.extend(verify_overhead_rows(n_requests=n_requests))
     return rows
 
 

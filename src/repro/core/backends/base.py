@@ -132,12 +132,24 @@ def backend_available(name: str) -> bool:
 # Job drivers
 # ---------------------------------------------------------------------------
 
-def run_sim_job(job: Any, backend: "str | SimBackend | None" = None) -> Any:
+def run_sim_job(job: Any, backend: "str | SimBackend | None" = None, *,
+                verify: bool = False) -> Any:
     """Execute one scenario job on a backend.  A non-``SimJob`` input (a
     terminal ``Evaluation`` from a gated-invalid design point) passes
-    through untouched."""
+    through untouched.
+
+    ``verify=True`` statically checks each call's scheduling plan first
+    (``repro.core.analysis.verify_trace`` — acyclicity, dangling dep /
+    resource references, pool feasibility) and raises
+    ``PlanVerificationError`` instead of handing a defective plan to the
+    event loop; the verdict is memoized per trace, so the steady-state
+    cost is a dict lookup."""
     if not isinstance(job, SimJob):
         return job
+    if verify:
+        from repro.core.analysis import verify_trace  # lazy: avoids a cycle
+        for c in job.calls:
+            verify_trace(c.trace, c.cfg, c.par, c.pools).raise_if_issues()
     be = get_backend(backend)
     results = [be.simulate(c.trace, c.cfg, c.par, pools=c.pools,
                            record_per_op=c.record_per_op,

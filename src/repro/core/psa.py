@@ -171,6 +171,14 @@ class ParameterSet:
             total *= p.cardinality()
         return total
 
+    def searched_params(self) -> list[Parameter]:
+        """The parameters an agent actually searches over: not pinned via
+        ``fixed`` and with more than one choice (the lint layer's dead-knob
+        pass only flags these — a 1-choice or pinned knob is inert by
+        construction, not a defect)."""
+        return [p for p in self.params
+                if p.name not in self.fixed and p.cardinality() > 1]
+
     def slot_names(self) -> list[str]:
         out: list[str] = []
         for p in self.params:

@@ -1087,6 +1087,12 @@ def _build_multi_tenant(**params) -> MultiTenantScenario:
         if isinstance(arch, str) and arch not in ARCHS:
             raise ValueError(f"tenant {i} ({t.get('name', '?')!r}) names "
                              f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+        known = {f.name for f in dataclasses.fields(Tenant)}
+        unknown = sorted(set(t) - known)
+        if unknown:
+            raise ValueError(
+                f"tenant {i} ({t.get('name', '?')!r}) has unknown "
+                f"key(s) {unknown}; known: {sorted(known)}")
         tenants.append(Tenant(arch=ARCHS[arch] if isinstance(arch, str)
                               else arch, **t))
     return _multi_tenant_fields(tenants=tuple(tenants), **params)

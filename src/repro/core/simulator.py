@@ -102,6 +102,10 @@ class SimResult:
     # op completion times (same opt-in as per_op_us): the request-stream
     # scenario reads per-wave first-token / last-token finish times off this
     op_finish_us: dict[int, float] = field(default_factory=dict)
+    # opt-in (``simulate(..., analyze=True)``): critical-path bottleneck
+    # attribution over the dependency DAG — see
+    # ``repro.core.analysis.CriticalPath.summary`` for the keys
+    analysis: dict[str, Any] | None = None
 
     @property
     def latency_ms(self) -> float:
@@ -160,6 +164,11 @@ class _SimPlan:
     ndeps0: list[int]
     children: list[list[int]]
     roots: list[int]
+    # every op's deps concatenated in uid order (CSR values; ``ndeps0`` is
+    # the row-length vector) — the static verifier / critical-path pass
+    # (``repro.core.analysis``) runs vectorized over this instead of
+    # re-walking the op list
+    deps_flat: np.ndarray
     comp_uids: np.ndarray
     comp_flops: np.ndarray
     comp_bytes: np.ndarray
@@ -199,6 +208,7 @@ def _sim_plan(trace: Trace) -> _SimPlan:
     coll_repeat: list[int] = []
     delay_ops: list[tuple[int, float]] = []
     pools: set[int] = {0}
+    deps_flat: list[int] = []
 
     def resource(pool: int, name: str) -> int:
         rid = res_index.get((pool, name))
@@ -238,11 +248,13 @@ def _sim_plan(trace: Trace) -> _SimPlan:
         ndeps0[op.uid] = len(op.deps)
         if not op.deps:
             roots.append(op.uid)
+        deps_flat.extend(op.deps)
         for d in op.deps:
             children[d].append(op.uid)
     plan = _SimPlan(n_ops=n, res_names=res_names, res_pool=res_pool,
                     res_of=res_of, ndeps0=ndeps0, children=children,
                     roots=roots,
+                    deps_flat=np.array(deps_flat, dtype=np.intp),
                     comp_uids=np.array(comp_idx, dtype=np.intp),
                     comp_flops=np.array(comp_flops, dtype=np.float64),
                     comp_bytes=np.array(comp_bytes, dtype=np.float64),
@@ -614,7 +626,9 @@ def simulate(trace: Trace, cfg: SystemConfig, par: Parallelism, *,
              pools: dict[int, Parallelism | tuple[Parallelism, Network]] | None = None,
              record_per_op: bool = False,
              record_finish: bool = False,
-             backend: "str | Any | None" = None) -> SimResult:
+             backend: "str | Any | None" = None,
+             verify: bool = False,
+             analyze: bool = False) -> SimResult:
     """Schedule ``trace`` on the device + network of ``cfg``.
 
     A thin delegate onto the selected simulation backend
@@ -628,9 +642,27 @@ def simulate(trace: Trace, cfg: SystemConfig, par: Parallelism, *,
     ``op_finish_us``); ``record_finish`` materializes only
     ``SimResult.op_finish_us`` — the cheaper flag streaming scenarios use
     per design point to read wave TTFT/TPOT without allocating the per-op
-    duration dict.  Both are off on the batched DSE hot path."""
+    duration dict.  Both are off on the batched DSE hot path.
+
+    ``verify=True`` statically checks the trace's scheduling plan first
+    (dependency-DAG acyclicity, dangling dep/resource references, pool
+    feasibility against ``cfg``/``pools``, repeat/delay sanity) and raises
+    ``repro.core.analysis.PlanVerificationError`` with a structured report
+    instead of letting a defective trace deadlock the event loop mid-run.
+    ``analyze=True`` additionally attaches critical-path bottleneck
+    attribution (compute vs collective vs gate time on the longest
+    dependency chain) as ``SimResult.analysis``."""
     from repro.core.backends import get_backend
 
-    return get_backend(backend).simulate(trace, cfg, par, pools=pools,
-                                         record_per_op=record_per_op,
-                                         record_finish=record_finish)
+    if verify:
+        from repro.core.analysis import verify_trace
+        verify_trace(trace, cfg, par, pools).raise_if_issues()
+    res = get_backend(backend).simulate(trace, cfg, par, pools=pools,
+                                        record_per_op=record_per_op,
+                                        record_finish=record_finish)
+    if analyze:
+        from repro.core.analysis import critical_path
+        plan, dur = plan_durations(trace, cfg, par, pools)
+        res.analysis = critical_path(plan, dur).summary(
+            makespan_us=res.makespan_us)
+    return res

@@ -137,6 +137,22 @@ class DesignSpace:
             f"{max_tries} tries — persistent constraint violations: {detail}."
             f" Check the fixed/pinned values against these constraints.")
 
+    def constraint_violation_rates(self, rng: np.random.Generator,
+                                   tries: int = 256) -> dict[str, float]:
+        """Per-constraint violation fraction over raw uniform decodes (no
+        repair) — the satisfiability probe ``repro.core.analysis.lint_pset``
+        uses to tell an unsatisfiable constraint (rate 1.0) from one the
+        repair path merely has to work at."""
+        counts: dict[str, int] = {c.describe(): 0
+                                  for c in self.pset.constraints}
+        for _ in range(tries):
+            vec = [int(rng.integers(len(g.choices))) for g in self.genes]
+            config = self.decode(vec)
+            for c in self.pset.constraints:
+                if not self._check(config, c):
+                    counts[c.describe()] += 1
+        return {name: n / max(tries, 1) for name, n in counts.items()}
+
     def repair(self, config: dict[str, Any], rng: np.random.Generator,
                max_tries: int = 64) -> dict[str, Any]:
         """Project a config toward the feasible set by resampling the slots

@@ -497,12 +497,20 @@ def _read_results(path: Path, spec_hash: str) -> dict[str, dict]:
                 f"{rec.get('spec_hash')!r}, not {spec_hash!r} — refusing to "
                 f"resume a different study into it")
         if rec.get("record") == "cell":
+            if "cell_id" not in rec:
+                raise ValueError(f"{path} line {i + 1}: cell record has no "
+                                 f"cell_id — corrupt results file")
             done[rec["cell_id"]] = rec
     return done
 
 
 def _result_from_record(rec: dict) -> SearchResult:
-    r = dict(rec["result"])
+    result = rec.get("result")
+    if not isinstance(result, dict):
+        raise ValueError(
+            f"cell record {rec.get('cell_id')!r} has no result payload — "
+            f"corrupt results file")
+    r = dict(result)
     if r.get("best_config") is not None:
         # JSON turned the config's tuples (coll_algo, topology, ...) into
         # lists; re-freeze so a resumed best_config round-trips through the
@@ -556,7 +564,10 @@ def run_study(spec: StudySpec, *, out: "str | Path | None" = None,
     writer = None
     if out_path is not None:
         out_path.parent.mkdir(parents=True, exist_ok=True)
-        fresh = not (resume and out_path.exists())
+        # an existing-but-empty file (touched, or fully torn-trimmed) has no
+        # header yet — treat it as fresh or the resumed file never gets one
+        fresh = not (resume and out_path.exists()
+                     and out_path.stat().st_size > 0)
         writer = out_path.open("w" if fresh else "a")
         if fresh:
             header = {"record": "study", "name": spec.name,
@@ -580,6 +591,14 @@ def run_study(spec: StudySpec, *, out: "str | Path | None" = None,
                     continue
                 h0, m0 = env.store_hits, env.store_misses
                 env.history.clear()   # bound campaign memory; best is in res
+                # fail-fast gate: statically verify a probe design point's
+                # scheduling plan before the search burns steps on a space
+                # whose every trace would hang or crash the simulator
+                # (verdicts are memoized per trace — ~free on shared plans)
+                from repro.core.analysis import preflight
+                rep = preflight(env, pset, seed=seed)
+                if rep is not None:
+                    rep.raise_if_issues()
                 res = run_search(pset, env, aspec.kind,
                                  steps=aspec.steps or spec.steps, seed=seed,
                                  batch_size=spec.batch_size,

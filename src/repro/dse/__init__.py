@@ -2,6 +2,8 @@
 
     python -m repro.dse run study.json [--out results.jsonl] [--resume]
                                        [--backend reference|jax]
+    python -m repro.dse lint study.json
+    python -m repro.dse analyze results.jsonl
     python -m repro.dse compare a.results.jsonl b.results.jsonl
     python -m repro.dse list-scenarios
     python -m repro.dse list-systems
@@ -11,10 +13,16 @@
 ``run`` executes a serialized ``StudySpec`` as one campaign (shared
 eval_store + process pool across the (agent x seed) grid), streaming
 per-cell results to a JSONL file next to the spec; ``--resume`` finishes a
-half-done campaign without re-evaluating completed cells.  ``compare``
-prints a per-cell best-reward table over two results files and a one-line
-winner summary.  The ``list-*`` commands enumerate the registries a spec's
-names resolve through.
+half-done campaign without re-evaluating completed cells.  ``lint``
+statically checks a spec WITHOUT running it: every registry name resolves,
+the constraint set is satisfiable, no searched knob is dead, and a probe
+design point's scheduling plan verifies — plus campaign shape/cost
+(cells, max evaluations, raw cardinality).  ``analyze`` re-derives each
+recorded cell's best design point and prints its critical-path bottleneck
+attribution (compute vs collective vs xfer vs gate).  ``compare`` prints a
+per-cell best-reward table over two results files and a one-line winner
+summary.  The ``list-*`` commands enumerate the registries a spec's names
+resolve through.
 """
 from __future__ import annotations
 
@@ -25,6 +33,7 @@ from pathlib import Path
 
 
 def _cmd_run(args: argparse.Namespace) -> int:
+    from repro.core.analysis import PlanVerificationError
     from repro.core.study import StudySpec, run_study
 
     say = (lambda s: None) if args.quiet else print
@@ -55,6 +64,12 @@ def _cmd_run(args: argparse.Namespace) -> int:
         out = Path(args.out) if args.out else \
             Path(args.spec).with_suffix(".results.jsonl")
         res = run_study(spec, out=out, resume=args.resume, log=say)
+    except PlanVerificationError as e:
+        # the per-cell preflight gate: a defective scheduling plan (cycle,
+        # dangling reference, infeasible pool) fails fast with the report
+        print(f"error: static verification failed\n{e.report.format()}",
+              file=sys.stderr)
+        return 2
     except (ValueError, OSError, ImportError) as e:
         # ValueError covers spec validation + resume refusals + bad JSON
         # (json.JSONDecodeError subclasses it); OSError covers missing
@@ -87,7 +102,7 @@ def _read_campaign(path: Path) -> tuple[dict, dict[str, dict]]:
     for rec in iter_jsonl_lenient(path):
         if rec.get("record") == "study" and not header:
             header = rec
-        elif rec.get("record") == "cell":
+        elif rec.get("record") == "cell" and "cell_id" in rec:
             cells[rec["cell_id"]] = rec
     if not cells:
         raise ValueError(f"{path} holds no cell records")
@@ -109,7 +124,9 @@ def _cmd_compare(args: argparse.Namespace) -> int:
               f"anyway", file=sys.stderr)
 
     def reward(rec: "dict | None") -> "float | None":
-        return None if rec is None else rec["result"]["best_reward"]
+        if rec is None:
+            return None
+        return (rec.get("result") or {}).get("best_reward")
 
     ids = list(dict.fromkeys([*cells_a, *cells_b]))
     name_a, name_b = path_a.name, path_b.name
@@ -133,15 +150,94 @@ def _cmd_compare(args: argparse.Namespace) -> int:
         print(f"{cid:<{w}}  {fa:>24}  {fb:>24}  {delta}")
 
     both = [cid for cid in ids if cid in cells_a and cid in cells_b]
-    best_a = max((reward(cells_a[c]) for c in cells_a), default=None)
-    best_b = max((reward(cells_b[c]) for c in cells_b), default=None)
+    best_a = max((r for c in cells_a if (r := reward(cells_a[c])) is not None),
+                 default=None)
+    best_b = max((r for c in cells_b if (r := reward(cells_b[c])) is not None),
+                 default=None)
     if wins_a == wins_b:
         verdict = "tie"
     else:
         win_name, wins = (name_a, wins_a) if wins_a > wins_b \
             else (name_b, wins_b)
         verdict = f"{win_name} — better in {wins}/{len(both)} shared cells"
-    print(f"winner: {verdict} (best reward A={best_a:.6g} B={best_b:.6g})")
+    fmt = lambda r: "n/a" if r is None else f"{r:.6g}"  # noqa: E731
+    print(f"winner: {verdict} "
+          f"(best reward A={fmt(best_a)} B={fmt(best_b)})")
+    return 0
+
+
+def _cmd_lint(args: argparse.Namespace) -> int:
+    from repro.core.analysis import lint_study
+    from repro.core.study import StudySpec
+
+    try:
+        spec = StudySpec.from_json(Path(args.spec))
+        rep = lint_study(spec)
+    except (ValueError, OSError, ImportError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    print(rep.format())
+    if not rep.ok:
+        print(f"lint: {len(rep.errors)} error(s) — this study would fail "
+              f"or waste its campaign", file=sys.stderr)
+        return 1
+    return 0
+
+
+def _cmd_analyze(args: argparse.Namespace) -> int:
+    from repro.core.analysis import (PlanVerificationError, aggregate_summaries,
+                                     analyze_job)
+    from repro.core.study import StudySpec, _result_from_record
+
+    try:
+        header, cells = _read_campaign(Path(args.results))
+        spec_d = header.get("spec")
+        if not spec_d:
+            raise ValueError(f"{args.results} has no study header record — "
+                             f"cannot rebuild the evaluation environment")
+        spec = StudySpec.from_dict(spec_d)
+        from repro.core.backends import get_backend
+        backend = args.backend or spec.backend
+        get_backend(backend)
+        env = spec.build_env()
+
+        cols = ("cell", "reward", "makespan_ms", "cp%", "compute%", "coll%",
+                "xfer%", "gate%", "bound")
+        rows: list[tuple] = []
+        for cid, rec in sorted(cells.items()):
+            res = _result_from_record(rec)
+            if res.best_config is None:
+                rows.append((cid, "n/a") + ("-",) * (len(cols) - 2))
+                continue
+            job = env.scenario.sim_job(env.context(res.best_config))
+            _, summaries = analyze_job(job, backend)
+            agg = aggregate_summaries(summaries)
+            if agg is None:    # best point gated invalid on re-evaluation
+                rows.append((cid, f"{res.best_reward:.6g}")
+                            + ("-",) * (len(cols) - 2))
+                continue
+            frac = agg["breakdown_frac"]
+            rows.append((
+                cid, f"{res.best_reward:.6g}",
+                f"{agg['makespan_us'] / 1e3:.1f}",
+                f"{agg['cp_frac_of_makespan'] * 100:.1f}",
+                f"{frac['compute'] * 100:.1f}",
+                f"{frac['collective'] * 100:.1f}",
+                f"{frac['xfer'] * 100:.1f}",
+                f"{frac['gate'] * 100:.1f}",
+                agg["bound"]))
+    except PlanVerificationError as e:
+        print(f"error: static verification failed\n{e.report.format()}",
+              file=sys.stderr)
+        return 2
+    except (ValueError, OSError, ImportError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    widths = [max(len(str(r[i])) for r in [cols, *rows])
+              for i in range(len(cols))]
+    for r in [cols, *rows]:
+        print("  ".join(f"{str(v):<{w}}" for v, w in zip(r, widths)).rstrip())
     return 0
 
 
@@ -203,6 +299,21 @@ def main(argv: list[str] | None = None) -> int:
     run_p.add_argument("--quiet", action="store_true",
                        help="only print the final campaign trailer")
     run_p.set_defaults(fn=_cmd_run)
+
+    lint_p = sub.add_parser(
+        "lint", help="statically check a StudySpec without running it")
+    lint_p.add_argument("spec", help="path to the study .json")
+    lint_p.set_defaults(fn=_cmd_lint)
+
+    an_p = sub.add_parser(
+        "analyze",
+        help="critical-path bottleneck attribution for each recorded "
+             "cell's best design point")
+    an_p.add_argument("results", help="campaign results .jsonl")
+    an_p.add_argument("--backend", default=None,
+                      help="simulation backend for the re-evaluation "
+                           "(default: the spec's)")
+    an_p.set_defaults(fn=_cmd_analyze)
 
     cmp_p = sub.add_parser(
         "compare", help="per-cell best-reward table over two results files")

@@ -526,3 +526,36 @@ def test_shared_eval_store_dedupes_across_envs(clear_dse_caches):
     env_c = _env(eval_store=store, batch=512)
     env_c.step(cfgs[0])
     assert env_c.store_hits == 0 and env_c.store_misses == 1
+
+
+# ---------------------------------------------------------------------------
+# scenario registry rejects unknown / typo'd parameter keys
+# ---------------------------------------------------------------------------
+
+def test_build_scenario_rejects_unknown_params():
+    from repro.core.scenario import build_scenario
+
+    with pytest.raises(ValueError) as ei:
+        build_scenario("request-stream", {"n_requests": 8, "rate_rsp": 9.0})
+    # the error names the typo AND the valid keys
+    assert "rate_rsp" in str(ei.value) and "rate_rps" in str(ei.value)
+
+
+def test_build_multi_tenant_rejects_unknown_tenant_keys():
+    from repro.core.scenario import build_scenario
+
+    with pytest.raises(ValueError) as ei:
+        build_scenario("multi-tenant", {"tenants": [
+            {"name": "t0", "arch": "qwen2-1.5b", "batch": 64, "seq": 512,
+             "slo": 100.0}]})       # typo: the field is slo_ms
+    msg = str(ei.value)
+    assert "'slo'" in msg and "slo_ms" in msg and "t0" in msg
+
+
+def test_build_multi_tenant_still_accepts_known_keys():
+    from repro.core.scenario import build_scenario
+
+    sc = build_scenario("multi-tenant", {"tenants": [
+        {"name": "t0", "arch": "qwen2-1.5b", "batch": 64, "seq": 512,
+         "phase": "serve", "slo_ms": 100.0, "decode_tokens": 8}]})
+    assert sc.tenants[0].slo_ms == 100.0

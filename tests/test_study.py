@@ -483,3 +483,85 @@ def test_cli_compare_results_files(tmp_path, capsys):
     assert "winner:" in got.out
 
     assert main(["compare", str(a), str(tmp_path / "missing.jsonl")]) == 2
+
+
+# ---------------------------------------------------------------------------
+# (h) CLI robustness: empty/torn JSONL, resume on an empty file, lint/analyze
+# ---------------------------------------------------------------------------
+
+def test_cli_compare_empty_and_torn_files_exit_2(tmp_path, capsys):
+    from repro.dse import main
+
+    spec_path = tmp_path / "s.json"
+    _train_spec(steps=4, batch_size=2).to_json(spec_path)
+    good = tmp_path / "good.jsonl"
+    assert main(["run", str(spec_path), "--out", str(good), "--quiet"]) == 0
+    capsys.readouterr()
+
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("")
+    assert main(["compare", str(good), str(empty)]) == 2
+    assert "error:" in capsys.readouterr().err
+
+    # header written, then killed mid-first-cell: lenient reader drops the
+    # torn tail, no cells remain -> clean exit 2, no traceback
+    torn = tmp_path / "torn.jsonl"
+    torn.write_text(good.read_text().split("\n")[0] + "\n"
+                    + '{"record": "cell", "cell_id": "0:ga:s0", "res')
+    assert main(["compare", str(good), str(torn)]) == 2
+    assert "no cell records" in capsys.readouterr().err
+
+    assert main(["analyze", str(empty)]) == 2
+    assert "error:" in capsys.readouterr().err
+
+
+def test_cli_resume_on_empty_results_file_writes_header(tmp_path, capsys):
+    from repro.dse import main
+
+    spec_path = tmp_path / "s.json"
+    _train_spec(steps=4, batch_size=2).to_json(spec_path)
+    out = tmp_path / "r.jsonl"
+    out.write_text("")      # e.g. `touch`ed by a scheduler before the run
+    assert main(["run", str(spec_path), "--out", str(out), "--resume",
+                 "--quiet"]) == 0
+    capsys.readouterr()
+    first = json.loads(out.read_text().splitlines()[0])
+    assert first["record"] == "study"       # header present, not cells-only
+    # and the file now resumes cleanly
+    assert main(["run", str(spec_path), "--out", str(out), "--resume",
+                 "--quiet"]) == 0
+    assert "cells_run=0 cells_skipped=1" in capsys.readouterr().out
+
+
+def test_cli_lint_and_analyze(tmp_path, capsys):
+    from repro.dse import main
+
+    spec_path = tmp_path / "s.json"
+    _train_spec(steps=4, batch_size=2).to_json(spec_path)
+    assert main(["lint", str(spec_path)]) == 0
+    out = capsys.readouterr().out
+    assert "ok" in out and "cells=1" in out
+
+    # unknown scenario param -> spec doesn't build -> exit 2
+    bad = tmp_path / "bad.json"
+    d = _train_spec().to_dict()
+    d["scenario_params"]["batcj"] = 64
+    bad.write_text(json.dumps(d))
+    assert main(["lint", str(bad)]) == 2
+    assert "batcj" in capsys.readouterr().err
+
+    # unsatisfiable pins -> lint reports, exit 1
+    unsat = tmp_path / "unsat.json"
+    d2 = _train_spec(psa_overrides={"dp": 1024, "sp": 1024}).to_dict()
+    unsat.write_text(json.dumps(d2))
+    assert main(["lint", str(unsat)]) == 1
+    got = capsys.readouterr()
+    assert "constraint-unsat" in got.out
+
+    # analyze: bottleneck-attribution table over a finished campaign
+    res = tmp_path / "r.jsonl"
+    assert main(["run", str(spec_path), "--out", str(res), "--quiet"]) == 0
+    capsys.readouterr()
+    assert main(["analyze", str(res)]) == 0
+    table = capsys.readouterr().out
+    assert "cp%" in table and "0:ga:s0" in table and "bound" in table
