@@ -75,6 +75,7 @@ def main() -> None:
         "fig10": lambda: fig10_agents.run(args.steps),
         "table6": lambda: table6_codesign.run(args.steps),
         "serve": lambda: serve_scenarios.run(args.steps),
+        "fleet": lambda: serve_scenarios.fleet_rows(args.steps),
         "roofline": lambda: roofline.run(),
         "calibration": lambda: calibration.run(),
         # the backend perf-trajectory rows alone (trace size scales with

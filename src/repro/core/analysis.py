@@ -813,6 +813,12 @@ def lint_study(spec) -> AnalysisReport:
         issues.extend(plan_rep.issues)
         info["trace_ops"] = plan_rep.info.get("n_ops", 0)
         info["sim_calls"] = plan_rep.info.get("calls", 0)
+    # scenarios can contribute shape facts of their own (e.g. the fleet
+    # scenario reports its replica count so the lint output shows the
+    # campaign's cost multiplier: replicas x trace ops)
+    hook = getattr(env.scenario, "lint_info", None)
+    if callable(hook):
+        info.update(hook())
     return AnalysisReport(
         subject=f"study[{spec.name}] {spec.arch} on {spec.system}, "
                 f"scenario={spec.scenario}, objective={spec.objective}",

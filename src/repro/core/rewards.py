@@ -172,15 +172,23 @@ class StreamMetrics:
     latency_p99_ms: float       # end-to-end (arrival -> last token)
     goodput_rps: float
     horizon_ms: float
+    # dollars of capacity actually provisioned over the horizon (the fleet
+    # layer sums replica-seconds per autoscaler decisions); None means a
+    # single statically-provisioned network — cost objectives then fall
+    # back to ``net.dollar_cost()``, bit-identical to the pre-fleet path
+    provisioned_cost: float | None = None
 
     def detail(self) -> dict[str, float]:
-        return {
+        d = {
             "n_requests": self.n_requests, "n_ok": self.n_ok,
             "ttft_p50_ms": self.ttft_p50_ms, "ttft_p99_ms": self.ttft_p99_ms,
             "tpot_p50_ms": self.tpot_p50_ms, "tpot_p99_ms": self.tpot_p99_ms,
             "latency_p99_ms": self.latency_p99_ms,
             "goodput_rps": self.goodput_rps, "horizon_ms": self.horizon_ms,
         }
+        if self.provisioned_cost is not None:
+            d["provisioned_cost"] = self.provisioned_cost
+        return d
 
 
 def stream_metrics(ttft_ms: "list[float] | np.ndarray",
@@ -225,10 +233,30 @@ def reward_goodput(metrics: StreamMetrics, net: Network) -> float:
     return metrics.goodput_rps
 
 
+def serving_cost(metrics: StreamMetrics, net: Network) -> float:
+    """The dollar denominator for cost-normalized streaming objectives.
+    Fleet scenarios price the replica-seconds actually provisioned by the
+    autoscaler (``metrics.provisioned_cost``); single-engine scenarios have
+    no fleet layer and pay the static network cost."""
+    if metrics.provisioned_cost is not None:
+        return metrics.provisioned_cost
+    return net.dollar_cost()
+
+
 def reward_goodput_per_cost(metrics: StreamMetrics, net: Network) -> float:
-    """Composite example: SLO-meeting requests/sec per million network
-    dollars — extensible objectives never touch the env or the scenarios."""
-    return metrics.goodput_rps / max(net.dollar_cost() / 1e6, 1e-9)
+    """Composite example: SLO-meeting requests/sec per million dollars of
+    provisioned capacity — extensible objectives never touch the env or
+    the scenarios."""
+    return metrics.goodput_rps / max(serving_cost(metrics, net) / 1e6, 1e-9)
+
+
+def reward_goodput_per_dollar(metrics: StreamMetrics, net: Network) -> float:
+    """The fleet-first-class form of goodput-per-cost: with an autoscaler,
+    replicas scaled down during traffic troughs stop costing, so the
+    denominator tracks provisioned replica-seconds rather than one static
+    ``Network`` price.  Identical to ``goodput_per_cost`` arithmetic — the
+    distinction is semantic intent (fleet studies name this one)."""
+    return reward_goodput_per_cost(metrics, net)
 
 
 register_objective(Objective("perf_per_bw", scalar_fn=reward_perf_per_bw,
@@ -242,6 +270,9 @@ register_objective(Objective("goodput", stream_fn=reward_goodput,
 register_objective(Objective(
     "goodput_per_cost", stream_fn=reward_goodput_per_cost,
     doc="SLO goodput per network $M (streaming only, composite)"))
+register_objective(Objective(
+    "goodput_per_dollar", stream_fn=reward_goodput_per_dollar,
+    doc="SLO goodput per provisioned $M — autoscaler-aware (fleet)"))
 
 STREAM_OBJECTIVES = tuple(n for n, o in OBJECTIVES.items() if o.streaming)
 

@@ -193,7 +193,10 @@ def _serving_wave_trace(spec: ArchSpec, par_pre: Parallelism,
                         wave_shapes: list[tuple[int, int, int]],
                         releases_ms: list[float],
                         max_inflight: int | None,
-                        meta: dict[str, Any]) -> Trace:
+                        meta: dict[str, Any],
+                        wave_tiers: tuple | None = None,
+                        admission: str = "gated",
+                        prefill_chunks: int = 1) -> Trace:
     """The pipelined multi-wave disagg trace: each wave is prefill (pool 0)
     -> KV ``xfer`` -> first decode token -> remaining tokens (pool 1,
     op-level ``repeat``).  Decode waves chain (the pool holds one wave's KV
@@ -206,21 +209,42 @@ def _serving_wave_trace(spec: ArchSpec, par_pre: Parallelism,
     heterogeneous request lengths reach the trace here, each wave padded to
     its longest admitted prompt and chained to its longest decode.
 
+    Continuous-batching engine knobs (all default to the classic chained
+    behavior):
+
+      ``admission="continuous"``   wave w's decode gates on wave w-1's
+                                   FIRST token instead of its completion —
+                                   the wave joins the resident batch
+                                   mid-wave (per-step admission).
+      ``prefill_chunks > 1``       chunked prefill: only the final KV chunk
+                                   is on the TTFT critical path (see
+                                   ``WaveSegment.transfer_chunks``).
+      ``wave_tiers``               per-wave priority tiers (lower = more
+                                   interactive); a wave's decode chains on
+                                   the last earlier wave of its own or a
+                                   higher tier, so interactive waves
+                                   preempt batch-tier decode chaining.
+
     Memoized on every trace-shaping input (the network/collective stacks
     don't shape the trace), so design points differing only in those stacks
     share one composed trace — and its piggybacked simulator plan."""
     return _serving_wave_trace_cached(
         spec, par_pre, par_dec, tuple(tuple(s) for s in wave_shapes),
         tuple(releases_ms), max_inflight,
-        str(meta.get("arch", "")), str(meta.get("scenario", "")))
+        str(meta.get("arch", "")), str(meta.get("scenario", "")),
+        wave_tiers, admission, prefill_chunks)
 
 
 def _serving_wave_trace_impl(spec: ArchSpec, par_pre: Parallelism,
                              par_dec: Parallelism, wave_shapes: tuple,
                              releases_ms: tuple, max_inflight: int | None,
-                             arch: str, scenario: str) -> Trace:
+                             arch: str, scenario: str,
+                             wave_tiers: tuple | None = None,
+                             admission: str = "gated",
+                             prefill_chunks: int = 1) -> Trace:
     meta = dict(arch=arch, scenario=scenario)
     lanes = max(1, min(par_pre.n_npus, par_dec.n_npus))
+    continuous = admission == "continuous"
     # each wave's last segment index (gates reference the EARLIER wave's
     # completion, so a one-token wave's last segment is 1, not 2)
     last_seg = [2 if dec > 1 else 1 for _, _, dec in wave_shapes]
@@ -231,12 +255,21 @@ def _serving_wave_trace_impl(spec: ArchSpec, par_pre: Parallelism,
         dec = generate_trace(spec, par_dec, batch=size, seq=seq,
                              mode="decode")
         xb = kv_cache_bytes(spec, batch=size, seq=seq) / lanes
-        segs = [WaveSegment(pre, 0, 1, xb), WaveSegment(dec, 1)]
+        segs = [WaveSegment(pre, 0, 1, xb, transfer_chunks=prefill_chunks),
+                WaveSegment(dec, 1)]
         if decode_tokens > 1:
             segs.append(WaveSegment(dec, 1, decode_tokens - 1))
         gates = []
-        if w >= 1:
-            gates.append((1, w - 1, last_seg[w - 1]))
+        prev = w - 1
+        if wave_tiers is not None:
+            # preemptive chaining: an interactive wave never waits behind a
+            # batch-tier wave's decode — it chains on the last earlier wave
+            # of its own-or-higher priority (batch tiers still pay full
+            # resource contention against the interactive waves' decode)
+            prev = next((v for v in range(w - 1, -1, -1)
+                         if wave_tiers[v] <= wave_tiers[w]), -1)
+        if prev >= 0:
+            gates.append((1, prev, 1 if continuous else last_seg[prev]))
         if max_inflight is not None and w >= max_inflight:
             gates.append((0, w - max_inflight, last_seg[w - max_inflight]))
         waves.append(Wave(tuple(segs), release_ms=releases_ms[w],
@@ -608,6 +641,78 @@ def _wave_request_index(waves: tuple) -> tuple:
     return cat, counts
 
 
+def _request_tiers_impl(n: int, priorities: tuple, frac: float,
+                        seed: int) -> tuple[int, ...]:
+    if priorities:
+        return tuple(int(priorities[i % len(priorities)]) for i in range(n))
+    if frac <= 0.0:
+        return (1,) * n
+    # a distinct stream per (seed, field), like the shape draws, so tiers
+    # don't perturb the arrival/length processes
+    rng = np.random.default_rng([seed, 0x7E])
+    return tuple(int(v) for v in (rng.random(n) >= frac))
+
+
+_request_tiers_cached = switchable_lru_cache(maxsize=64)(_request_tiers_impl)
+
+
+@switchable_lru_cache(maxsize=1024)
+def _form_waves_tiered(arrivals: tuple, tiers: tuple, window_ms: float,
+                       cap: int) -> tuple[tuple[tuple[int, ...], float, int], ...]:
+    """Per-tier admission queues merged by release time: each priority tier
+    forms its own waves (an interactive request never waits for a batch-tier
+    wave to fill), tagged with the tier for the preemption gates.  Returns
+    ``((indices, release_ms, tier), ...)`` sorted by (release, tier)."""
+    out: list[tuple[tuple[int, ...], float, int]] = []
+    for tier in sorted(set(tiers)):
+        idxs = tuple(i for i, t in enumerate(tiers) if t == tier)
+        sub = tuple(arrivals[i] for i in idxs)
+        for w_idxs, rel in _form_waves_cached(sub, window_ms, cap):
+            out.append((tuple(idxs[j] for j in w_idxs), rel, tier))
+    out.sort(key=lambda w: (w[1], w[2]))
+    return tuple(out)
+
+
+def _per_request_times(waves, wave_shapes, shapes, arrivals,
+                       wt) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized per-request ``(ttft, tpot, latency)`` arrays from the
+    per-wave ``(first_token, last_token)`` times, flattened in (wave,
+    admitted-index) order: same arithmetic as the per-request loop it
+    replaces (one subtract / one multiply-add per request, identical
+    operand order).  Shared by the single-engine finalize and the fleet
+    layer's per-replica concatenation."""
+    t_first = np.asarray([t for t, _ in wt])
+    t_done = np.asarray([t for _, t in wt])
+    wave_dec = np.asarray([d for _, _, d in wave_shapes])
+    tpot_w = (t_done - t_first) / np.maximum(wave_dec - 1, 1)
+    cat, counts = _wave_request_index(tuple(waves))
+    dec_r = np.asarray([d for _, d in shapes])[cat]
+    t_first_r = np.repeat(t_first, counts)
+    tpot_r = np.repeat(tpot_w, counts)
+    # a request finishes after ITS decode length at the wave's
+    # token cadence (== t_done for the wave's longest request)
+    done_r = np.where(dec_r == np.repeat(wave_dec, counts),
+                      np.repeat(t_done, counts),
+                      t_first_r + tpot_r * (dec_r - 1))
+    arr_r = np.asarray(arrivals)[cat]
+    return t_first_r - arr_r, tpot_r, done_r - arr_r
+
+
+def _kv_inflight_cap(spec: ArchSpec, par_dec: Parallelism, resident: int,
+                     full_seq: int, headroom: float, capacity_gb: float,
+                     static_gb: float) -> int:
+    """KV paging-pressure admission cap: how many waves' resident caches fit
+    the decode pool's free HBM (capacity minus the non-KV footprint
+    ``static_gb`` — weights + activations) at ``headroom`` occupancy.  One
+    wave's cache is priced per decode NPU at its full post-decode length
+    (prompt + decode tokens; batch shards over the pool's replicas, KV over
+    its TP)."""
+    per_wave_gb = kv_cache_bytes(spec, batch=resident / par_dec.dp,
+                                 seq=full_seq, tp=par_dec.tp) / 1e9
+    free_gb = capacity_gb - static_gb
+    return max(1, int((free_gb * headroom) // max(per_wave_gb, 1e-12)))
+
+
 @dataclass(frozen=True)
 class RequestStreamScenario:
     """Serving a request STREAM instead of one analytic batch: requests
@@ -640,6 +745,15 @@ class RequestStreamScenario:
     prompt and chains to its longest decode; a request's completion time is
     its own decode length times the wave's token cadence.
 
+    Continuous-batching engine knobs are opt-in: each empty choice tuple
+    below contributes no PsA parameter and leaves the wave model
+    bit-identical to the classic chained behavior.  Non-empty tuples expose
+    (as scenario-stack knobs) ``admission`` (gated vs continuous mid-wave
+    join), ``prefill_chunks`` (chunked-prefill KV streaming),
+    ``preempt`` (priority-tier decode preemption; pair with
+    ``priority_frac`` or replayed ``priorities``), and ``kv_headroom``
+    (KV paging pressure throttling ``max_inflight`` against free HBM).
+
     Rewards are streaming metrics: ``objective="goodput"`` maximizes
     requests meeting BOTH SLOs per second; any classic objective applies to
     the p99 end-to-end request latency.  TTFT/TPOT p50/p99 are always in
@@ -665,10 +779,19 @@ class RequestStreamScenario:
     max_inflights: tuple = (1, 2, 4, 8)
     prefill_fracs: tuple = (0.25, 0.5, 0.625, 0.75, 0.875)
     decode_batches: tuple = (4, 8, 16, 32)
+    # -- continuous-batching engine knobs (opt-in; empty = classic model) --
+    arrival_times_ms: tuple = ()     # explicit arrival times (fleet routing
+    #                                  replay; wins over gaps/rate)
+    priority_frac: float = 0.0       # fraction of interactive (tier-0) reqs
+    priorities: tuple = ()           # replayed per-request tiers (0 = hi)
+    admissions: tuple = ()           # e.g. ("gated", "continuous")
+    prefill_chunk_choices: tuple = ()  # e.g. (1, 2, 4)
+    preempt_choices: tuple = ()      # e.g. (0, 1)
+    kv_headrooms: tuple = ()         # e.g. (0.5, 0.8) of free HBM for KV
     name: str = "request-stream"
 
     def psa_params(self) -> list[Parameter]:
-        return [
+        params = [
             Parameter("batch_window_ms", "scenario", self.batch_windows_ms,
                       doc="max wait for an open admission wave to fill"),
             Parameter("max_inflight", "scenario", self.max_inflights,
@@ -678,6 +801,27 @@ class RequestStreamScenario:
             Parameter("decode_batch", "scenario", self.decode_batches,
                       doc="requests continuously batched per decode replica"),
         ]
+        if self.admissions:
+            params.append(Parameter(
+                "admission", "scenario", self.admissions,
+                doc="gated: wave chains on predecessor completion; "
+                    "continuous: joins the resident batch mid-wave"))
+        if self.prefill_chunk_choices:
+            params.append(Parameter(
+                "prefill_chunks", "scenario", self.prefill_chunk_choices,
+                doc="KV chunks streamed during prefill — only the last is "
+                    "on the TTFT critical path"))
+        if self.preempt_choices:
+            params.append(Parameter(
+                "preempt", "scenario", self.preempt_choices,
+                doc="1: interactive (tier-0) waves preempt batch-tier "
+                    "decode chaining"))
+        if self.kv_headrooms:
+            params.append(Parameter(
+                "kv_headroom", "scenario", self.kv_headrooms,
+                doc="fraction of free HBM usable by resident KV — throttles "
+                    "max_inflight under paging pressure"))
+        return params
 
     def psa_constraints(self, n_npus: int) -> list[Constraint]:
         return []
@@ -685,9 +829,16 @@ class RequestStreamScenario:
     # -- arrival process ---------------------------------------------------
     def arrivals_ms(self) -> tuple[float, ...]:
         """Request arrival times: deterministic given the scenario fields
-        (replayed gaps, or seeded exponential gaps for a Poisson process).
-        Memoized — arrivals are identical for every design point of a
-        search, so the hot path shouldn't redraw them per evaluation."""
+        (explicit times, replayed gaps, or seeded exponential gaps for a
+        Poisson process).  Memoized — arrivals are identical for every
+        design point of a search, so the hot path shouldn't redraw them per
+        evaluation."""
+        if self.arrival_times_ms:
+            if len(self.arrival_times_ms) != self.n_requests:
+                raise ValueError(
+                    f"arrival_times_ms has {len(self.arrival_times_ms)} "
+                    f"entries for n_requests={self.n_requests}")
+            return tuple(float(t) for t in self.arrival_times_ms)
         return _arrivals_cached(self.arrival_gaps_ms, self.n_requests,
                                 self.rate_rps, self.seed)
 
@@ -703,6 +854,42 @@ class RequestStreamScenario:
     def heterogeneous(self) -> bool:
         return bool(self.prompt_len_range or self.decode_len_range
                     or self.prompt_lens or self.decode_lens)
+
+    def request_tiers(self) -> tuple[int, ...]:
+        """Per-request priority tier (0 = interactive, 1 = batch): replayed
+        (``priorities``, cycled) or seeded Bernoulli(``priority_frac``) on a
+        stream distinct from the arrival/shape draws.  The all-one-tier
+        default keeps wave formation and gating bit-identical to the
+        pre-tier path."""
+        return _request_tiers_cached(self.n_requests, self.priorities,
+                                     self.priority_frac, self.seed)
+
+    def engine_extended(self) -> bool:
+        """True when any opt-in continuous-batching knob is exposed."""
+        return bool(self.admissions or self.prefill_chunk_choices
+                    or self.preempt_choices or self.kv_headrooms)
+
+    def _engine_knobs(self, config: Mapping[str, Any]) -> tuple[str, int, bool]:
+        """(admission, prefill_chunks, preempt) resolved from a design
+        point, defaulting to the classic chained model when the knobs
+        aren't in the search space."""
+        return (str(config.get("admission", "gated")),
+                int(config.get("prefill_chunks", 1)),
+                bool(int(config.get("preempt", 0))))
+
+    def _admitted(self, ctx: EnvContext, resident: int,
+                  preempt: bool) -> tuple[tuple, tuple | None]:
+        """(waves, wave_tiers): per-tier admission queues when preemption is
+        on and the stream is tier-mixed, the classic single queue (tiers
+        None) otherwise."""
+        window = float(ctx.config["batch_window_ms"])
+        tiers = self.request_tiers()
+        if preempt and len(set(tiers)) > 1:
+            tw = _form_waves_tiered(self.arrivals_ms(), tiers, window,
+                                    max(1, resident))
+            return (tuple((idxs, rel) for idxs, rel, _ in tw),
+                    tuple(t for _, _, t in tw))
+        return self.form_waves(window, max_batch=resident), None
 
     def _wave_shapes(self, waves) -> tuple:
         """Per-wave ``(size, seq, decode_tokens)``: each wave pads to its
@@ -733,13 +920,19 @@ class RequestStreamScenario:
 
     def _stream_trace(self, ctx: EnvContext, par_pre: Parallelism,
                       par_dec: Parallelism,
-                      waves: list[tuple[list[int], float]]) -> Trace:
+                      waves: list[tuple[list[int], float]], *,
+                      max_inflight: int,
+                      wave_tiers: tuple | None = None,
+                      admission: str = "gated",
+                      prefill_chunks: int = 1) -> Trace:
         return _serving_wave_trace(
             ctx.spec, par_pre, par_dec,
             wave_shapes=self._wave_shapes(waves),
             releases_ms=[rel for _, rel in waves],
-            max_inflight=int(ctx.config["max_inflight"]),
-            meta=dict(arch=ctx.spec.name, scenario=self.name))
+            max_inflight=max_inflight,
+            meta=dict(arch=ctx.spec.name, scenario=self.name),
+            wave_tiers=wave_tiers, admission=admission,
+            prefill_chunks=prefill_chunks)
 
     def _resolved(self, ctx: EnvContext):
         n_pre, n_dec = self._pools(ctx)
@@ -752,11 +945,21 @@ class RequestStreamScenario:
 
     def traces(self, ctx: EnvContext) -> dict[str, Trace]:
         par_pre, par_dec, resident = self._resolved(ctx)
-        waves = self.form_waves(float(ctx.config["batch_window_ms"]),
-                                max_batch=resident)
-        return {"stream": self._stream_trace(ctx, par_pre, par_dec, waves)}
+        admission, prefill_chunks, preempt = self._engine_knobs(ctx.config)
+        waves, wave_tiers = self._admitted(ctx, resident, preempt)
+        return {"stream": self._stream_trace(
+            ctx, par_pre, par_dec, waves,
+            max_inflight=int(ctx.config["max_inflight"]),
+            wave_tiers=wave_tiers, admission=admission,
+            prefill_chunks=prefill_chunks)}
 
-    def sim_job(self, ctx: EnvContext) -> "SimJob | Evaluation":
+    def stream_call(self, ctx: EnvContext):
+        """The engine core behind ``sim_job``, reusable per fleet replica:
+        resolve pools, gate memory, admit waves, build the one pipelined
+        SimCall.  Returns ``(call, request_times, detail, last_arrival_ms)``
+        where ``request_times(res)`` maps the call's ``SimResult`` to
+        per-request ``(ttft, tpot, latency)`` arrays — or an ``Evaluation``
+        when a validity gate trips."""
         try:
             par_pre, par_dec, resident = self._resolved(ctx)
         except ValueError as e:
@@ -777,68 +980,79 @@ class RequestStreamScenario:
             return _invalid(f"decode memory {fp_dec.total_gb:.1f}GB "
                             f"> {ctx.capacity_gb}GB")
 
-        waves = self.form_waves(float(ctx.config["batch_window_ms"]),
-                                max_batch=resident)
-        tr = self._stream_trace(ctx, par_pre, par_dec, waves)
+        admission, prefill_chunks, preempt = self._engine_knobs(ctx.config)
+        max_inflight = int(ctx.config["max_inflight"])
+        kv_headroom = ctx.config.get("kv_headroom")
+        kv_cap = None
+        if kv_headroom is not None:
+            kv_cap = _kv_inflight_cap(
+                ctx.spec, par_dec, resident,
+                max_seq + max(d for _, d in shapes), float(kv_headroom),
+                ctx.capacity_gb, fp_dec.total_gb - fp_dec.kv_cache_gb)
+            max_inflight = min(max_inflight, kv_cap)
+
+        waves, wave_tiers = self._admitted(ctx, resident, preempt)
+        tr = self._stream_trace(ctx, par_pre, par_dec, waves,
+                                max_inflight=max_inflight,
+                                wave_tiers=wave_tiers, admission=admission,
+                                prefill_chunks=prefill_chunks)
         pre_pool = (par_pre, *sub_network_indexed(ctx.network, par_pre.n_npus))
         dec_pool = (par_dec, *sub_network_indexed(ctx.network, par_dec.n_npus))
+        arrivals = self.arrivals_ms()
+        wave_shapes = self._wave_shapes(waves)
+
+        def request_times(res: SimResult):
+            return _per_request_times(waves, wave_shapes, shapes, arrivals,
+                                      _wave_times_ms(tr, res))
+
+        detail = {
+            "scenario": self.name, "prefill_npus": par_pre.n_npus,
+            "decode_npus": par_dec.n_npus, "decode_tp": par_dec.tp,
+            "decode_replicas": par_dec.dp,
+            "decode_batch": int(ctx.config["decode_batch"]),
+            "batch_window_ms": float(ctx.config["batch_window_ms"]),
+            "max_inflight": int(ctx.config["max_inflight"]),
+            "waves": len(waves),
+            "wave_sizes": [len(idxs) for idxs, _ in waves],
+            "prefill_gb": fp_pre.total_gb, "decode_gb": fp_dec.total_gb,
+            **({"prompt_len_mean":
+                sum(p for p, _ in shapes) / len(shapes),
+                "prompt_len_max": max_seq,
+                "decode_len_mean":
+                sum(d for _, d in shapes) / len(shapes),
+                "decode_len_max": max(d for _, d in shapes)}
+               if self.heterogeneous() else {}),
+            **({"admission": admission, "prefill_chunks": prefill_chunks,
+                "preempt": int(preempt),
+                "effective_max_inflight": max_inflight,
+                **({"kv_inflight_cap": kv_cap} if kv_cap is not None
+                   else {})}
+               if self.engine_extended() else {}),
+        }
+        call = SimCall(tr, ctx.sys_cfg, par_pre,
+                       pools={0: pre_pool, 1: dec_pool}, record_finish=True)
+        return call, request_times, detail, arrivals[-1]
+
+    def sim_job(self, ctx: EnvContext) -> "SimJob | Evaluation":
+        got = self.stream_call(ctx)
+        if isinstance(got, Evaluation):
+            return got
+        call, request_times, detail, last_arrival_ms = got
 
         def fin(results: list[SimResult]) -> Evaluation:
             res = results[0]
-            arrivals = self.arrivals_ms()
-            wave_shapes = self._wave_shapes(waves)
-            wt = _wave_times_ms(tr, res)
-            # vectorized per-request metrics: same arithmetic as the
-            # per-request loop it replaces (one subtract / one fma-free
-            # multiply-add per request, identical operand order), flattened
-            # in (wave, admitted-index) order
-            t_first = np.asarray([t for t, _ in wt])
-            t_done = np.asarray([t for _, t in wt])
-            wave_dec = np.asarray([d for _, _, d in wave_shapes])
-            tpot_w = (t_done - t_first) / np.maximum(wave_dec - 1, 1)
-            cat, counts = _wave_request_index(tuple(waves))
-            dec_r = np.asarray([d for _, d in shapes])[cat]
-            t_first_r = np.repeat(t_first, counts)
-            tpot_r = np.repeat(tpot_w, counts)
-            # a request finishes after ITS decode length at the wave's
-            # token cadence (== t_done for the wave's longest request)
-            done_r = np.where(dec_r == np.repeat(wave_dec, counts),
-                              np.repeat(t_done, counts),
-                              t_first_r + tpot_r * (dec_r - 1))
-            arr_r = np.asarray(arrivals)[cat]
-            ttfts = t_first_r - arr_r
-            tpots = tpot_r
-            lats = done_r - arr_r
-            horizon_ms = max(res.latency_ms, arrivals[-1])
+            ttfts, tpots, lats = request_times(res)
+            horizon_ms = max(res.latency_ms, last_arrival_ms)
             m = stream_metrics(ttfts, tpots, lats,
                                ttft_slo_ms=self.ttft_slo_ms,
                                tpot_slo_ms=self.tpot_slo_ms,
                                horizon_ms=horizon_ms)
             r = stream_reward(ctx.objective, m, ctx.sys_cfg.network)
             return Evaluation(r, m.latency_p99_ms, True, {
-                "scenario": self.name, "prefill_npus": par_pre.n_npus,
-                "decode_npus": par_dec.n_npus, "decode_tp": par_dec.tp,
-                "decode_replicas": par_dec.dp,
-                "decode_batch": int(ctx.config["decode_batch"]),
-                "batch_window_ms": float(ctx.config["batch_window_ms"]),
-                "max_inflight": int(ctx.config["max_inflight"]),
-                "waves": len(waves),
-                "wave_sizes": [len(idxs) for idxs, _ in waves],
-                "makespan_ms": res.latency_ms,
-                "prefill_gb": fp_pre.total_gb, "decode_gb": fp_dec.total_gb,
-                **({"prompt_len_mean":
-                    sum(p for p, _ in shapes) / len(shapes),
-                    "prompt_len_max": max_seq,
-                    "decode_len_mean":
-                    sum(d for _, d in shapes) / len(shapes),
-                    "decode_len_max": max(d for _, d in shapes)}
-                   if self.heterogeneous() else {}),
-                **m.detail(),
+                **detail, "makespan_ms": res.latency_ms, **m.detail(),
             })
 
-        return SimJob((SimCall(tr, ctx.sys_cfg, par_pre,
-                               pools={0: pre_pool, 1: dec_pool},
-                               record_finish=True),), fin)
+        return SimJob((call,), fin)
 
     def evaluate(self, ctx: EnvContext) -> Evaluation:
         return run_sim_job(self.sim_job(ctx), ctx.backend)
@@ -1106,3 +1320,8 @@ register_scenario("disagg-serve",
 register_scenario("request-stream",
                   dataclass_scenario_builder(RequestStreamScenario))
 register_scenario("multi-tenant", _build_multi_tenant)
+
+# the fleet subsystem (repro.core.fleet) registers its scenario on import;
+# importing it here — after every name it needs is defined — makes the
+# "fleet" kind resolvable wherever the scenario registry is
+from repro.core import fleet as _fleet  # noqa: E402,F401  (cycle-closing)

@@ -337,11 +337,16 @@ class WaveSegment:
     how a ``decode_tokens``-long token chain is condensed into the one-token
     decode trace without op blow-up.  ``transfer_bytes`` inserts a
     cross-partition ``xfer`` collective between this segment and the next
-    (the KV-cache handoff from a prefill pool to a decode pool)."""
+    (the KV-cache handoff from a prefill pool to a decode pool).
+    ``transfer_chunks > 1`` models chunked prefill: earlier KV chunks
+    stream while the prompt is still computing, so only the LAST chunk
+    (``bytes / chunks``) sits on the next segment's critical path; the
+    remaining volume still occupies the transfer fabric as a trailing op."""
     trace: Trace
     pool: int
     repeat: int = 1
     transfer_bytes: float = 0.0
+    transfer_chunks: int = 1
 
 
 @dataclass(frozen=True)
@@ -412,12 +417,25 @@ def compose_request_waves(waves: list[Wave],
                      if op.uid not in has_children]
             seg_tails.append(tails)
             if seg.transfer_bytes > 0 and si < len(wave.segments) - 1:
+                chunks = max(1, int(seg.transfer_chunks))
                 uid = len(ops)
                 ops.append(Op(uid, f"{prefix}s{si}.xfer", "coll", list(tails),
-                              coll="xfer", size_bytes=seg.transfer_bytes,
+                              coll="xfer",
+                              size_bytes=seg.transfer_bytes / chunks,
                               group="xfer", pool=seg.pool))
                 xfer_uids.append(uid)
                 prev_tails = [uid]
+                if chunks > 1:
+                    # chunked prefill: only the final chunk gates the next
+                    # segment; the earlier chunks' volume trails behind it
+                    # on the same transfer fabric (a sink op — it delays
+                    # later waves' transfers, not this wave's first token)
+                    bg = len(ops)
+                    ops.append(Op(bg, f"{prefix}s{si}.xfer_bg", "coll",
+                                  [uid], coll="xfer",
+                                  size_bytes=seg.transfer_bytes
+                                  * (chunks - 1) / chunks,
+                                  group="xfer", pool=seg.pool))
             else:
                 xfer_uids.append(None)
                 prev_tails = tails

@@ -216,16 +216,27 @@ def _cmd_analyze(args: argparse.Namespace) -> int:
                 rows.append((cid, f"{res.best_reward:.6g}")
                             + ("-",) * (len(cols) - 2))
                 continue
-            frac = agg["breakdown_frac"]
-            rows.append((
-                cid, f"{res.best_reward:.6g}",
-                f"{agg['makespan_us'] / 1e3:.1f}",
-                f"{agg['cp_frac_of_makespan'] * 100:.1f}",
-                f"{frac['compute'] * 100:.1f}",
-                f"{frac['collective'] * 100:.1f}",
-                f"{frac['xfer'] * 100:.1f}",
-                f"{frac['gate'] * 100:.1f}",
-                agg["bound"]))
+
+            def _attr_row(label, reward, a):
+                frac = a["breakdown_frac"]
+                return (label, reward,
+                        f"{a['makespan_us'] / 1e3:.1f}",
+                        f"{a['cp_frac_of_makespan'] * 100:.1f}",
+                        f"{frac['compute'] * 100:.1f}",
+                        f"{frac['collective'] * 100:.1f}",
+                        f"{frac['xfer'] * 100:.1f}",
+                        f"{frac['gate'] * 100:.1f}",
+                        a["bound"])
+
+            rows.append(_attr_row(cid, f"{res.best_reward:.6g}", agg))
+            if args.per_call and len(summaries) > 1:
+                # per-call sub-rows: one per SimCall — for fleet jobs that
+                # is one per replica, attributing bottlenecks replica by
+                # replica
+                for i, s in enumerate(summaries):
+                    sub = aggregate_summaries([s])
+                    if sub is not None:
+                        rows.append(_attr_row(f"{cid}[{i}]", "-", sub))
     except PlanVerificationError as e:
         print(f"error: static verification failed\n{e.report.format()}",
               file=sys.stderr)
@@ -313,6 +324,9 @@ def main(argv: list[str] | None = None) -> int:
     an_p.add_argument("--backend", default=None,
                       help="simulation backend for the re-evaluation "
                            "(default: the spec's)")
+    an_p.add_argument("--per-call", action="store_true", dest="per_call",
+                      help="also print one attribution row per SimCall "
+                           "(per replica, for fleet scenarios)")
     an_p.set_defaults(fn=_cmd_analyze)
 
     cmp_p = sub.add_parser(

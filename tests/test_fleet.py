@@ -1,0 +1,456 @@
+"""Fleet serving subsystem (PR 8): seeded arrival generators, router and
+autoscaler policies, the 1-replica reduction to RequestStreamScenario
+(bit-identical, golden-pinned, under both backends), the continuous-batching
+engine knobs, and the provisioned-cost goodput-per-dollar objective."""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.configs import ARCHS
+from repro.core.compute import SYSTEM_2_DEVICE
+from repro.core.env import CosmicEnv
+from repro.core.fleet import (ARRIVAL_KINDS, FleetScenario, ROUTER_POLICIES,
+                              arrival_times_ms, autoscale_active,
+                              route_requests)
+from repro.core.scenario import RequestStreamScenario
+from repro.core.study import StudySpec
+from repro.core.workload import WaveSegment, compose_request_waves, Wave
+
+SPEC = ARCHS["gpt3-13b"]
+
+# the known-valid system2 design point from test_scenarios, plus the fleet
+# scenario-stack knobs
+_CFG = dict(dp=8, sp=1, pp=1, weight_sharded=0, sched_policy="fifo",
+            coll_algo=("ring", "direct", "ring", "rhd"), chunks=2,
+            multidim_coll="baseline",
+            topology=("ring", "fc", "ring", "switch"),
+            npus_per_dim=(4, 8, 4, 8), bw_per_dim=(400, 200, 150, 100),
+            prefill_frac=0.875, decode_batch=4,
+            batch_window_ms=200.0, max_inflight=2)
+_FLEET_CFG = dict(_CFG, router="round-robin", autoscale_target=0.0,
+                  autoscale_cooldown_s=10.0)
+
+_STREAM_KW = dict(n_requests=16, seq=2048, decode_tokens=8, rate_rps=16.0,
+                  max_batch=8, seed=3)
+
+
+def _env(scenario, **kw):
+    kw.setdefault("objective", "goodput")
+    return CosmicEnv(spec=SPEC, n_npus=1024, device=SYSTEM_2_DEVICE,
+                     scenario=scenario, **kw)
+
+
+# ---------------------------------------------------------------------------
+# (a) arrival generators
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ARRIVAL_KINDS)
+def test_arrivals_seeded_deterministic_and_monotone(kind):
+    kw = dict(rate_rps=8.0, gaps_ms=(10.0, 20.0))
+    a = arrival_times_ms(kind, 64, seed=7, **kw)
+    b = arrival_times_ms(kind, 64, seed=7, **kw)
+    assert a == b
+    assert len(a) == 64
+    # strictly positive first arrival, non-negative gaps throughout
+    assert a[0] > 0.0
+    assert all(t1 >= t0 for t0, t1 in zip(a, a[1:]))
+    if kind != "replayed":  # replay ignores the seed by design
+        assert arrival_times_ms(kind, 64, seed=8, **kw) != a
+
+
+def test_diurnal_realized_rate_tracks_nominal():
+    """Over whole periods the diurnal realized rate converges to the mean
+    of base and peak; within a period the peak half-cycle is denser."""
+    base, peak, period = 8.0, 24.0, 30.0
+    times = arrival_times_ms("diurnal", 4000, rate_rps=base, peak_rps=peak,
+                             period_s=period, seed=1)
+    realized = len(times) / (times[-1] / 1e3)
+    assert 0.85 * (base + peak) / 2 < realized < 1.15 * (base + peak) / 2
+    # rate(t) peaks at period/2 (1-cos profile): middle-of-period halves
+    # hold more arrivals than the edges
+    in_peak = sum(1 for t in times
+                  if period / 4 <= (t / 1e3) % period < 3 * period / 4)
+    assert in_peak > len(times) - in_peak
+
+
+def test_bursty_realized_rate_and_burst_density():
+    rate = 8.0
+    times = arrival_times_ms("bursty", 4000, rate_rps=rate, burst_factor=6.0,
+                             burst_s=2.0, seed=2)
+    realized = len(times) / (times[-1] / 1e3)
+    # MMPP time-average rate sits between the calm and burst rates
+    assert rate * 0.5 < realized < rate * 6.0
+    # bursts exist: the tightest 5% of gaps are far tighter than the mean gap
+    gaps = sorted(t1 - t0 for t0, t1 in zip(times, times[1:]))
+    mean_gap = (times[-1] - times[0]) / (len(times) - 1)
+    assert gaps[len(gaps) // 20] < mean_gap / 2
+
+
+def test_arrivals_rejects_unknown_kind_and_missing_replay():
+    with pytest.raises(ValueError, match="unknown arrival kind"):
+        arrival_times_ms("lunar", 4)
+    with pytest.raises(ValueError, match="arrival_gaps_ms"):
+        arrival_times_ms("replayed", 4)
+
+
+def test_fleet_poisson_matches_engine_arrivals():
+    """The fleet's poisson generator makes the exact draws the engine
+    makes — the 1-replica reduction depends on it."""
+    eng = RequestStreamScenario(n_requests=32, rate_rps=8.0, seed=5)
+    fl = FleetScenario(n_requests=32, rate_rps=8.0, seed=5,
+                       arrival="poisson")
+    assert fl.arrivals_ms() == eng.arrivals_ms()
+
+
+def test_replayed_arrivals_roundtrip_through_study_json():
+    """A replayed trace survives StudySpec JSON serialization exactly."""
+    spec = StudySpec(
+        name="replay-rt", arch="qwen2-1.5b", system="system2",
+        scenario="fleet", objective="goodput_per_dollar",
+        scenario_params=dict(n_requests=8, seq=1024, decode_tokens=8,
+                             arrival="replayed",
+                             arrival_gaps_ms=(12.5, 40.0, 7.25),
+                             replicas=2),
+        steps=2, batch_size=2)
+    rt = StudySpec.from_json(spec.to_json())
+    assert rt == spec
+    sc = rt.build_scenario()
+    assert isinstance(sc, FleetScenario)
+    assert sc.arrivals_ms() == FleetScenario(
+        n_requests=8, arrival="replayed",
+        arrival_gaps_ms=(12.5, 40.0, 7.25)).arrivals_ms()
+    # cycled gap replay, absolute times
+    assert sc.arrivals_ms()[:4] == (12.5, 52.5, 59.75, 72.25)
+
+
+# ---------------------------------------------------------------------------
+# (b) router policies
+# ---------------------------------------------------------------------------
+
+def test_router_round_robin_cycles_active_replicas():
+    assign = route_requests("round-robin", tuple(range(6)), [3] * 6,
+                            [1.0] * 6, tuple(range(6)), 3)
+    assert assign == (0, 1, 2, 0, 1, 2)
+    # requests only ever land on active replicas
+    assign = route_requests("round-robin", tuple(range(6)), [1] * 3 + [2] * 3,
+                            [1.0] * 6, tuple(range(6)), 2)
+    assert all(r < a for r, a in zip(assign, [1] * 3 + [2] * 3))
+
+
+def test_router_least_outstanding_prefers_idle_replica():
+    # request 0 parks 100ms of work on replica 0; the next two arrivals
+    # (within that window) go to the idle replicas, then back to 0
+    assign = route_requests("least-outstanding", (0.0, 1.0, 2.0, 3.0),
+                            [3] * 4, [100.0, 1.0, 1.0, 1.0],
+                            tuple(range(4)), 3)
+    assert assign == (0, 1, 2, 1)
+
+
+def test_router_prefix_hash_is_session_sticky():
+    groups = (4, 9, 4, 9, 4, 2)
+    assign = route_requests("prefix-hash", tuple(range(6)), [3] * 6,
+                            [1.0] * 6, groups, 3)
+    by_group = {}
+    for g, r in zip(groups, assign):
+        by_group.setdefault(g, set()).add(r)
+    assert all(len(rs) == 1 for rs in by_group.values())
+    with pytest.raises(ValueError, match="unknown router"):
+        route_requests("random", (0.0,), [1], [1.0], (0,), 1)
+
+
+# ---------------------------------------------------------------------------
+# (c) autoscaler
+# ---------------------------------------------------------------------------
+
+def test_autoscaler_static_when_target_disabled():
+    act = autoscale_active((0.0, 50_000.0), epoch_ms=10_000.0,
+                           min_replicas=1, max_replicas=4, target_util=0.0,
+                           cooldown_epochs=3, replica_rps=2.0)
+    assert act == (4,) * 6
+
+
+def test_autoscaler_scales_up_fast_and_down_slow():
+    # 4 epochs of heavy traffic (80 rps vs an effective 20 rps/replica at
+    # target 0.8) then idle: scale-up jumps (after one observation epoch),
+    # scale-down sheds one replica per cooldown epoch
+    heavy = tuple(i * 12.5 for i in range(3200))      # 80 rps for 40s
+    act = autoscale_active(heavy + (90_000.0,), epoch_ms=10_000.0,
+                           min_replicas=1, max_replicas=4, target_util=0.8,
+                           cooldown_epochs=1, replica_rps=25.0)
+    assert act[0] == 1                 # capacity decided before arrivals
+    assert max(act) == 4               # jumps to the demanded count
+    assert act.index(4) <= 2           # ...quickly
+    tail = act[5:]                     # idle epochs: one shed per epoch
+    assert all(a >= b >= b_next or True for a, b, b_next in
+               zip(tail, tail[1:], tail[2:]))
+    assert sorted(tail, reverse=True) == list(tail)
+    assert act[-1] >= 1                # never below min_replicas
+
+
+def test_autoscaler_cooldown_delays_decisions():
+    heavy = tuple(i * 12.5 for i in range(3200))
+    fast = autoscale_active(heavy, epoch_ms=10_000.0, min_replicas=1,
+                            max_replicas=4, target_util=0.8,
+                            cooldown_epochs=1, replica_rps=25.0)
+    slow = autoscale_active(heavy, epoch_ms=10_000.0, min_replicas=1,
+                            max_replicas=4, target_util=0.8,
+                            cooldown_epochs=3, replica_rps=25.0)
+    assert sum(slow) <= sum(fast)      # cooldown holds capacity back
+    assert max(slow) <= 4 and min(slow) >= 1
+
+
+# ---------------------------------------------------------------------------
+# (d) 1-replica reduction: FleetScenario == RequestStreamScenario
+# ---------------------------------------------------------------------------
+
+_STREAM_METRIC_KEYS = ("goodput_rps", "ttft_p50_ms", "ttft_p99_ms",
+                       "tpot_p50_ms", "tpot_p99_ms", "latency_p99_ms",
+                       "n_ok", "horizon_ms")
+
+
+@pytest.mark.parametrize("backend", ["reference", "jax"])
+def test_one_replica_static_fleet_reduces_to_engine(backend,
+                                                    clear_dse_caches):
+    """A 1-replica static fleet IS the engine: bit-identical stream
+    metrics and reward under both simulation backends."""
+    a = _env(RequestStreamScenario(**_STREAM_KW),
+             backend=backend).evaluate_config(_CFG)
+    b = _env(FleetScenario(**_STREAM_KW, replicas=1, arrival="poisson",
+                           routers=("round-robin",),
+                           autoscale_targets=(0.0,)),
+             backend=backend).evaluate_config(_FLEET_CFG)
+    assert a.valid and b.valid
+    assert b.reward == a.reward
+    for k in _STREAM_METRIC_KEYS:
+        assert b.detail[k] == a.detail[k], k
+    assert b.detail["replica_requests"] == [_STREAM_KW["n_requests"]]
+    # golden pin: the reduction must not drift silently
+    assert a.reward == pytest.approx(13.668876414816836, abs=0.0)
+
+
+@pytest.mark.parametrize("backend", ["reference", "jax"])
+def test_one_replica_goodput_per_cost_unchanged(backend, clear_dse_caches):
+    """Satellite 1: autoscaler-aware pricing leaves the single-replica
+    static goodput_per_cost bit-identical to the pre-fleet formula
+    (provisioned time == horizon -> cost == net.dollar_cost())."""
+    a = _env(RequestStreamScenario(**_STREAM_KW), backend=backend,
+             objective="goodput_per_cost").evaluate_config(_CFG)
+    b = _env(FleetScenario(**_STREAM_KW, replicas=1, arrival="poisson",
+                           routers=("round-robin",),
+                           autoscale_targets=(0.0,)),
+             backend=backend,
+             objective="goodput_per_cost").evaluate_config(_FLEET_CFG)
+    assert a.valid and b.valid
+    assert b.reward == a.reward
+    assert a.reward == pytest.approx(2.966336027521015, abs=0.0)
+    # goodput_per_dollar is the same number here (fleet-first-class alias)
+    c = _env(FleetScenario(**_STREAM_KW, replicas=1, arrival="poisson",
+                           routers=("round-robin",),
+                           autoscale_targets=(0.0,)),
+             backend=backend,
+             objective="goodput_per_dollar").evaluate_config(_FLEET_CFG)
+    assert c.reward == a.reward
+
+
+# ---------------------------------------------------------------------------
+# (e) continuous-batching engine knobs
+# ---------------------------------------------------------------------------
+
+def _knob_scenario(**kw):
+    # near-simultaneous arrivals + small waves: the queue is deep enough
+    # that the decode-admission gates actually bind
+    base = dict(_STREAM_KW, rate_rps=1000.0, max_batch=2)
+    base.update(kw)
+    base.setdefault("admissions", ("gated", "continuous"))
+    base.setdefault("prefill_chunk_choices", (1, 4))
+    base.setdefault("preempt_choices", (0, 1))
+    return RequestStreamScenario(**base)
+
+
+def test_engine_knobs_add_psa_params_only_when_searched():
+    base = RequestStreamScenario(**_STREAM_KW)
+    names = {p.name for p in base.psa_params()}
+    assert {"admission", "prefill_chunks", "preempt",
+            "kv_headroom"}.isdisjoint(names)
+    ext = _knob_scenario(kv_headrooms=(0.2, 0.8))
+    names = {p.name for p in ext.psa_params()}
+    assert {"admission", "prefill_chunks", "preempt",
+            "kv_headroom"} <= names
+
+
+def test_continuous_admission_joins_earlier(clear_dse_caches):
+    """Continuous admission gates a wave's decode on the previous wave's
+    FIRST decode token instead of its completion — strictly earlier, so
+    makespan can only improve."""
+    sc = _knob_scenario()
+    gated = _env(sc).evaluate_config(dict(_CFG, admission="gated"))
+    cont = _env(sc).evaluate_config(dict(_CFG, admission="continuous"))
+    assert gated.valid and cont.valid
+    assert gated.detail["admission"] == "gated"
+    assert cont.detail["admission"] == "continuous"
+    assert cont.detail["makespan_ms"] < gated.detail["makespan_ms"]
+    assert cont.reward >= gated.reward
+
+
+def test_chunked_prefill_cuts_critical_transfer(clear_dse_caches):
+    """Chunked prefill streams KV to the decode pool: only the last chunk
+    sits on the critical path, so TTFT-bearing makespan shrinks."""
+    sc = _knob_scenario()
+    whole = _env(sc).evaluate_config(dict(_CFG, prefill_chunks=1))
+    chunked = _env(sc).evaluate_config(dict(_CFG, prefill_chunks=4))
+    assert whole.valid and chunked.valid
+    assert chunked.detail["prefill_chunks"] == 4
+    assert chunked.detail["ttft_p99_ms"] <= whole.detail["ttft_p99_ms"]
+    assert chunked.detail["makespan_ms"] <= whole.detail["makespan_ms"]
+
+
+def test_preemption_reorders_decode_chain(clear_dse_caches):
+    """With mixed priority tiers, preemptive admission chains a wave's
+    decode behind the last wave of equal-or-higher priority, letting
+    high-tier waves bypass low-tier ones."""
+    sc = _knob_scenario(priority_frac=0.5)
+    tiers = sc.request_tiers()
+    assert set(tiers) == {0, 1}       # the 50/50 split actually mixed
+    fifo = _env(sc).evaluate_config(dict(_CFG, preempt=0))
+    pre = _env(sc).evaluate_config(dict(_CFG, preempt=1))
+    assert fifo.valid and pre.valid
+    assert bool(pre.detail["preempt"]) and not fifo.detail["preempt"]
+    # the schedule actually changed
+    assert pre.detail["makespan_ms"] != fifo.detail["makespan_ms"]
+
+
+def test_kv_headroom_caps_inflight(clear_dse_caches):
+    """A tight KV paging budget throttles admission below the searched
+    max_inflight; a loose one leaves it alone."""
+    sc = RequestStreamScenario(**_STREAM_KW, kv_headrooms=(0.0001, 1.0),
+                               admissions=("gated",))
+    loose = _env(sc).evaluate_config(dict(_CFG, kv_headroom=1.0,
+                                          max_inflight=2))
+    tight = _env(sc).evaluate_config(dict(_CFG, kv_headroom=0.0001,
+                                          max_inflight=2))
+    assert loose.valid and tight.valid
+    assert loose.detail["effective_max_inflight"] == 2
+    assert tight.detail["effective_max_inflight"] == 1
+    assert tight.detail["kv_inflight_cap"] == 1
+    assert tight.detail["makespan_ms"] >= loose.detail["makespan_ms"]
+
+
+def test_default_engine_unchanged_by_knob_plumbing(clear_dse_caches):
+    """Satellite guard: with no knob choice tuples, the engine's params,
+    trace composition, and reward are exactly the pre-PR ones (golden)."""
+    sc = RequestStreamScenario(**_STREAM_KW)
+    ev = _env(sc).evaluate_config(_CFG)
+    assert ev.valid
+    assert ev.reward == pytest.approx(13.668876414816836, abs=0.0)
+    assert "admission" not in ev.detail
+
+
+def test_transfer_chunks_background_op():
+    """compose_request_waves with transfer_chunks>1 emits one critical
+    chunk plus a background remainder op that depends on it, conserving
+    total bytes."""
+    from repro.core.workload import generate_trace, Parallelism
+    par = Parallelism(n_npus=1, dp=1, sp=1, pp=1)
+    t = generate_trace(ARCHS["qwen2-1.5b"], par, batch=1, seq=256,
+                       mode="inference")
+
+    def mk(chunks):
+        w = Wave([WaveSegment(t, 0, 1, 8e9, transfer_chunks=chunks),
+                  WaveSegment(t, 1)], 0.0, [])
+        return compose_request_waves([w])
+
+    whole = mk(1)
+    split = mk(4)
+    xfers1 = [op for op in whole.ops if op.group == "xfer"]
+    xfers4 = [op for op in split.ops if op.group == "xfer"]
+    assert len(xfers1) == 1 and len(xfers4) == 2
+    assert sum(o.size_bytes for o in xfers4) == pytest.approx(8e9)
+    crit, bg = xfers4
+    assert bg.name.endswith("xfer_bg")
+    assert bg.deps == [crit.uid]
+    assert crit.size_bytes == pytest.approx(2e9)
+
+
+# ---------------------------------------------------------------------------
+# (f) multi-replica fleet: cost, traces, lint
+# ---------------------------------------------------------------------------
+
+def _fleet(**kw):
+    kw.setdefault("n_requests", 32)
+    kw.setdefault("seq", 2048)
+    kw.setdefault("decode_tokens", 8)
+    kw.setdefault("rate_rps", 32.0)
+    kw.setdefault("max_batch", 8)
+    kw.setdefault("replicas", 2)
+    kw.setdefault("seed", 3)
+    return FleetScenario(**kw)
+
+
+def test_fleet_two_replicas_evaluates_and_prices(clear_dse_caches):
+    sc = _fleet(arrival="diurnal", epoch_s=1.0, autoscale_targets=(0.0, 0.8))
+    env = _env(sc, objective="goodput_per_dollar")
+    static = env.evaluate_config(dict(_FLEET_CFG, router="least-outstanding"))
+    assert static.valid
+    d = static.detail
+    assert d["replicas"] == 2 and d["router"] == "least-outstanding"
+    assert sum(d["replica_requests"]) == 32
+    assert all(n > 0 for n in d["replica_requests"])  # both replicas used
+    assert d["provisioned_cost"] > 0
+    # static full-fleet provisioning prices both partitions for the whole
+    # horizon: cost equals the sum of the replica partition costs
+    assert d["active_per_epoch"] == [2] * len(d["active_per_epoch"])
+    # autoscaling can only lower the provisioned bill
+    scaled = env.evaluate_config(dict(_FLEET_CFG,
+                                      router="least-outstanding",
+                                      autoscale_target=0.8,
+                                      autoscale_cooldown_s=1.0))
+    assert scaled.valid
+    assert scaled.detail["provisioned_cost"] <= d["provisioned_cost"]
+
+
+def test_fleet_traces_expose_every_replica(clear_dse_caches):
+    sc = _fleet()
+    env = _env(sc)
+    traces = sc.traces(env.context(_FLEET_CFG))
+    assert set(traces) == {"replica0", "replica1"}
+    assert all(len(tr.ops) > 0 for tr in traces.values())
+
+
+def test_fleet_invalid_partition_is_gated(clear_dse_caches):
+    sc = _fleet(replicas=3)           # 1024 % 3 != 0
+    ev = _env(sc).evaluate_config(_FLEET_CFG)
+    assert not ev.valid
+    assert "replica" in json.dumps(ev.detail)
+
+
+def test_fleet_canonicalization_pins_dead_knobs():
+    sc = _fleet()
+    cfg = dict(router="prefix-hash", autoscale_target=0.0,
+               autoscale_cooldown_s=30.0)
+    canon = sc.canonical(cfg)
+    assert canon["autoscale_cooldown_s"] == sc.autoscale_cooldowns_s[0]
+    assert canon["router"] == "prefix-hash"     # live with 2 replicas
+    one = _fleet(replicas=1)
+    assert one.canonical(cfg)["router"] == one.routers[0]
+
+
+def test_fleet_lint_info_surfaces_shape():
+    info = _fleet(arrival="bursty").lint_info()
+    assert info == {"replicas": 2, "arrival": "bursty",
+                    "fleet_requests": 32}
+    assert set(ROUTER_POLICIES) == {"round-robin", "least-outstanding",
+                                    "prefix-hash"}
+
+
+def test_prefix_affinity_router_gets_cache_hits(clear_dse_caches):
+    """With few sessions and a prefix cache, session-sticky routing reuses
+    prompt KV: effective prompt work drops vs round-robin scatter."""
+    sc = _fleet(n_sessions=4, prefix_hit_frac=0.9, rate_rps=64.0)
+    env = _env(sc)
+    rr = env.evaluate_config(dict(_FLEET_CFG, router="round-robin"))
+    ph = env.evaluate_config(dict(_FLEET_CFG, router="prefix-hash"))
+    assert rr.valid and ph.valid
+    # affinity routing can only help or tie aggregate service time here
+    assert ph.detail["makespan_ms"] <= rr.detail["makespan_ms"] * 1.25
