@@ -63,7 +63,8 @@ def main() -> None:
 
     from benchmarks import (calibration, fig4_spread, fig6_fullstack,
                             fig8_scalability, fig10_agents, roofline,
-                            serve_scenarios, table6_codesign)
+                            serve_scenarios, surrogate_bench,
+                            table6_codesign)
     from benchmarks.common import emit
 
     import os
@@ -76,6 +77,7 @@ def main() -> None:
         "table6": lambda: table6_codesign.run(args.steps),
         "serve": lambda: serve_scenarios.run(args.steps),
         "fleet": lambda: serve_scenarios.fleet_rows(args.steps),
+        "surrogate": lambda: surrogate_bench.run(args.steps),
         "roofline": lambda: roofline.run(),
         "calibration": lambda: calibration.run(),
         # the backend perf-trajectory rows alone (trace size scales with

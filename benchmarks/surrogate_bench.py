@@ -1,0 +1,116 @@
+"""Surrogate subsystem benchmark: predictor fidelity on a real eval-store
+corpus + surrogate-guided search vs plain GA at an EQUAL true-simulation
+budget (the acceptance comparison) + the warm-start effect.
+
+Rows (gpt3-13b on system2, the paper's Fig. 10 workload):
+
+* ``surrogate_fidelity[model]`` — holdout Spearman rank correlation and
+  top-k recall of each registered predictor on a >=500-point corpus of
+  true evaluations (``BENCH_SURR_CORPUS`` scales it; CI runs a small one).
+* ``surrogate_screen_rate`` — candidates scored per second through the
+  fitted predictor (the screening hot path: pool featurization + predict).
+* ``surrogate_vs_ga`` — mean best reward over seeds, both agents given the
+  same number of true simulations; the surrogate additionally screens a
+  ~10^4 pool per generation for free.
+* ``surrogate_warm_start`` — cold vs warm-started surrogate at HALF the
+  budget: the warm agent's predictor starts from the corpus a previous
+  campaign persisted.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import SEEDS, STEPS, make_env, make_pset
+from repro.core.dse import run_search
+from repro.core.space import DesignSpace
+from repro.core.surrogate import (SURROGATE_REGISTRY, Featurizer,
+                                  build_dataset, holdout_fidelity,
+                                  make_surrogate)
+
+ARCH = "gpt3-13b"
+CORPUS = int(os.environ.get("BENCH_SURR_CORPUS", "1000"))
+
+
+def make_corpus(n: int = CORPUS, seed: int = 7):
+    """n true evaluations of constraint-valid random design points — the
+    stand-in for what a persistent eval store accumulates over campaigns."""
+    env = make_env(ARCH, "system2")
+    space = DesignSpace(make_pset("system2"))
+    rng = np.random.default_rng(seed)
+    cfgs = space.sample_batch(n, rng)
+    evs = env.step_batch(cfgs)
+    return space, [(c, ev.reward) for c, ev in zip(cfgs, evs)]
+
+
+def fidelity_rows(space: DesignSpace, records) -> list[tuple]:
+    feat = Featurizer(space)
+    ds = build_dataset(feat, records)
+    rows = []
+    for name in sorted(SURROGATE_REGISTRY):
+        t0 = time.time()
+        rep = holdout_fidelity(name, ds.X, ds.y, seed=0)
+        fit_s = time.time() - t0
+        rows.append((f"surrogate_fidelity[{name}]", fit_s * 1e6,
+                     f"spearman={rep['spearman']:.3f} "
+                     f"topk_recall={rep['topk_recall']:.2f} "
+                     f"n_train={rep['n_train']} n_holdout={rep['n_holdout']} "
+                     f"n_features={feat.n_features}"))
+    # screening throughput: featurize + score a 10^4 raw pool through the
+    # fitted default model (the per-generation cost the agent pays instead
+    # of 10^4 simulations)
+    model = make_surrogate("knn", seed=0)
+    model.fit(ds.X, ds.y)
+    rng = np.random.default_rng(0)
+    pool = space.raw_decode_batch(10_000, rng)
+    t0 = time.time()
+    model.predict(feat.featurize_vecs(pool))
+    wall = time.time() - t0
+    rows.append(("surrogate_screen_rate", wall / len(pool) * 1e6,
+                 f"cands_per_s={len(pool) / wall:.0f} pool={len(pool)} "
+                 f"n_fit={ds.n}"))
+    return rows
+
+
+def equal_budget_rows(records, steps: "int | None" = None) -> list[tuple]:
+    steps = steps or min(max(STEPS, 128), 256)
+    pset = make_pset("system2")
+    bs = 32
+
+    def best(kind, seed, **kw):
+        return run_search(pset, make_env(ARCH, "system2"), kind, steps=steps,
+                          seed=seed, batch_size=bs, **kw).best_reward
+
+    ga = [best("ga", s) for s in SEEDS]
+    su = [best("surrogate", s) for s in SEEDS]
+    wins = sum(a >= g for a, g in zip(su, ga))
+    rows = [("surrogate_vs_ga", 0.0,
+             f"surrogate_best={np.mean(su):.4g} ga_best={np.mean(ga):.4g} "
+             f"ratio=x{np.mean(su) / max(np.mean(ga), 1e-300):.2f} "
+             f"wins={wins}_of_{len(SEEDS)} steps={steps} seeds={len(SEEDS)}")]
+    # warm start at half budget, corpus = the fidelity corpus (what a
+    # previous campaign's persistent store would hand run_study)
+    half = max(steps // 2, 32)
+    cold = [run_search(pset, make_env(ARCH, "system2"), "surrogate",
+                       steps=half, seed=s, batch_size=bs).best_reward
+            for s in SEEDS]
+    warm = [run_search(pset, make_env(ARCH, "system2"), "surrogate",
+                       steps=half, seed=s, batch_size=bs,
+                       warm_start=records).best_reward for s in SEEDS]
+    rows.append(("surrogate_warm_start", 0.0,
+                 f"warm_best={np.mean(warm):.4g} cold_best={np.mean(cold):.4g} "
+                 f"ratio=x{np.mean(warm) / max(np.mean(cold), 1e-300):.2f} "
+                 f"steps={half} corpus={len(records)}"))
+    return rows
+
+
+def run(steps: "int | None" = None) -> list[tuple]:
+    space, records = make_corpus()
+    return fidelity_rows(space, records) + equal_budget_rows(records, steps)
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

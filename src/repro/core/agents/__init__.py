@@ -1,8 +1,11 @@
-from repro.core.agents.base import Agent, make_agent
+from repro.core.agents.base import (AGENT_HYPER, Agent, KNOWN_AGENTS,
+                                    make_agent)
 from repro.core.agents.random_walk import RandomWalker
 from repro.core.agents.genetic import GeneticAlgorithm
 from repro.core.agents.aco import AntColony
 from repro.core.agents.bayesian import BayesianOptimizer
+from repro.core.agents.surrogate import SurrogateScreeningAgent
 
-__all__ = ["Agent", "make_agent", "RandomWalker", "GeneticAlgorithm",
-           "AntColony", "BayesianOptimizer"]
+__all__ = ["Agent", "make_agent", "KNOWN_AGENTS", "AGENT_HYPER",
+           "RandomWalker", "GeneticAlgorithm", "AntColony",
+           "BayesianOptimizer", "SurrogateScreeningAgent"]

@@ -45,7 +45,20 @@ class Agent:
 
 # the registered agent kinds, importable without the agent modules (StudySpec
 # validates agent grids at spec time, before any search machinery loads)
-KNOWN_AGENTS = ("rw", "ga", "aco", "bo")
+KNOWN_AGENTS = ("rw", "ga", "aco", "bo", "surrogate")
+
+# hyper names each kind's __init__ accepts (beyond space/seed) — the spec
+# layer rejects unknown keys at spec time instead of TypeError'ing cells
+# deep into a campaign; a sync assert in make_agent keeps this honest
+AGENT_HYPER: dict[str, frozenset[str]] = {
+    "rw": frozenset({"population"}),
+    "ga": frozenset({"population", "p_mut", "tournament"}),
+    "aco": frozenset({"ants", "greediness", "evaporation", "deposit"}),
+    "bo": frozenset({"n_init", "candidates", "lengthscale", "noise",
+                     "max_fit"}),
+    "surrogate": frozenset({"model", "pool", "explore", "warmup", "elite",
+                            "p_mut", "random_frac", "max_fit"}),
+}
 
 
 def make_agent(kind: str, space: DesignSpace, seed: int = 0, **hyper) -> Agent:
@@ -53,11 +66,13 @@ def make_agent(kind: str, space: DesignSpace, seed: int = 0, **hyper) -> Agent:
     from repro.core.agents.bayesian import BayesianOptimizer
     from repro.core.agents.genetic import GeneticAlgorithm
     from repro.core.agents.random_walk import RandomWalker
+    from repro.core.agents.surrogate import SurrogateScreeningAgent
 
     kinds = {"rw": RandomWalker, "ga": GeneticAlgorithm,
-             "aco": AntColony, "bo": BayesianOptimizer}
-    assert set(kinds) == set(KNOWN_AGENTS), \
-        "KNOWN_AGENTS out of sync with make_agent's registry"
+             "aco": AntColony, "bo": BayesianOptimizer,
+             "surrogate": SurrogateScreeningAgent}
+    assert set(kinds) == set(KNOWN_AGENTS) == set(AGENT_HYPER), \
+        "KNOWN_AGENTS/AGENT_HYPER out of sync with make_agent's registry"
     if kind not in kinds:
         raise ValueError(f"unknown agent kind {kind!r}; "
                          f"known: {sorted(kinds)}")

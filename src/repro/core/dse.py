@@ -36,6 +36,9 @@ class SearchResult:
     wall_s: float
     batch_size: int = 1
     points_per_s: float = 0.0
+    # corpus records handed to the agent before step 0 (surrogate warm
+    # start from a persistent eval store); 0 for agents without one
+    warm_start_points: int = 0
 
     def summary(self) -> dict[str, Any]:
         return {
@@ -52,14 +55,24 @@ class SearchResult:
 
 def run_search(pset: ParameterSet, env: CosmicEnv, agent_kind: str = "ga",
                steps: int = 500, seed: int = 0, batch_size: int = 1,
-               workers: int = 0, **agent_hyper) -> SearchResult:
+               workers: int = 0, warm_start: Any = None,
+               **agent_hyper) -> SearchResult:
     """Explore ``steps`` design points.
 
     batch_size: population evaluated per agent round (1 = sequential).
     workers:    >1 fans distinct points of each batch out to a process pool.
+    warm_start: optional (config, reward) records from prior campaigns
+                (e.g. a persistent eval store); handed to the agent's
+                ``warm_start()`` before step 0 when it has one — a
+                surrogate agent starts with a trained predictor instead of
+                burning its budget on warmup coverage.  Agents without a
+                ``warm_start`` method ignore the records.
     """
     space = DesignSpace(pset)
     agent = make_agent(agent_kind, space, seed=seed, **agent_hyper)
+    warm_n = 0
+    if warm_start and hasattr(agent, "warm_start"):
+        warm_n = agent.warm_start(warm_start)
     t0 = time.time()
     curve: list[float] = []
     best, best_step, best_lat = -np.inf, 0, float("inf")
@@ -92,4 +105,5 @@ def run_search(pset: ParameterSet, env: CosmicEnv, agent_kind: str = "ga",
         invalid_rate=n_invalid / max(steps, 1), wall_s=wall,
         batch_size=max(batch_size, 1),
         points_per_s=steps / max(wall, 1e-9),
+        warm_start_points=warm_n,
     )

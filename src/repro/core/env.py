@@ -227,6 +227,18 @@ class CosmicEnv:
             self._memo_epoch = cache_epoch()
         return self._eval_cache
 
+    def store_records(self) -> list[tuple[dict[str, Any], float]]:
+        """(config, reward) pairs this env has memoized — from its slice of
+        a shared ``eval_store`` (only this env's signature) or its private
+        memo.  The surrogate layer's dataset builders consume this shape
+        (``repro.core.surrogate.build_dataset``)."""
+        memo = self._memo()
+        if self.eval_store is not None:
+            sig = self._store_sig()
+            return [(dict(k[1]), ev.reward)
+                    for k, ev in memo.items() if k[0] == sig]
+        return [(dict(k), ev.reward) for k, ev in memo.items()]
+
     def _evaluate_memo(self, config: dict[str, Any]) -> Evaluation:
         if not caches_enabled():
             return self.evaluate_config(config)

@@ -45,6 +45,17 @@ class DesignSpace:
         self._gene_scalar = [p.ndim == 1 for p in self._gene_param]
         self._gene_choice_idx = [{v: i for i, v in enumerate(g.choices)}
                                  for g in self.genes]
+        # batch-sampling tables: per-gene cardinality vector and object-dtype
+        # choice arrays (object dtype so a vectorized gather hands back the
+        # ORIGINAL python values — decode_batch must be bit-identical to
+        # decode, numpy scalar types included)
+        self._gene_sizes = np.array([len(g.choices) for g in self.genes],
+                                    dtype=np.int64)
+        self._gene_values: list[np.ndarray] = []
+        for g in self.genes:
+            arr = np.empty(len(g.choices), dtype=object)
+            arr[:] = g.choices
+            self._gene_values.append(arr)
 
     # -- config <-> vector ----------------------------------------------
     def n_genes(self) -> int:
@@ -111,6 +122,124 @@ class DesignSpace:
             return prod <= target
         raise ValueError(c.kind)
 
+    # -- batch sampling ------------------------------------------------------
+    # The raw-decode probe machinery (PR-7 lint) vectorized: one broadcast
+    # ``rng.integers(0, sizes, size=(n, G))`` block is draw-for-draw
+    # identical to n repeated config-major scalar loops
+    # ``[int(rng.integers(len(g.choices))) for g in genes]`` (numpy's
+    # bounded-integer path consumes the bit stream element by element in
+    # C order), so batched and scalar probes share one seed policy.
+
+    def raw_decode_batch(self, n: int, rng: np.random.Generator) -> np.ndarray:
+        """(n, n_genes) raw index matrix — unconstrained uniform decodes.
+        Stream-identical to n repeated scalar raw draws from the same rng."""
+        if not self.genes:
+            return np.zeros((n, 0), dtype=np.int64)
+        return rng.integers(0, self._gene_sizes, size=(n, len(self.genes)),
+                            dtype=np.int64)
+
+    def decode_batch(self, vecs: np.ndarray) -> list[dict[str, Any]]:
+        """Vectorized ``decode`` over an (n, n_genes) index matrix: one
+        object-dtype gather per gene, then per-row dict assembly.  Row i is
+        bit-identical to ``decode(vecs[i])``."""
+        vecs = np.asarray(vecs, dtype=np.int64) % self._gene_sizes
+        cols = [self._gene_values[i][vecs[:, i]]
+                for i in range(len(self.genes))]
+        out: list[dict[str, Any]] = []
+        for r in range(vecs.shape[0]):
+            config: dict[str, Any] = dict(self.pset.fixed)
+            tmp: dict[str, list] = {}
+            for i, g in enumerate(self.genes):
+                if self._gene_scalar[i]:
+                    config[g.param] = cols[i][r]
+                else:
+                    tmp.setdefault(
+                        g.param,
+                        [None] * self._gene_param[i].ndim)[g.dim] = cols[i][r]
+            for k, v in tmp.items():
+                config[k] = tuple(v)
+            out.append(config)
+        return out
+
+    def _slot_column(self, vecs: np.ndarray, slot: str) -> "np.ndarray | None":
+        """One slot's numeric value column over an index matrix; None when
+        the slot's values are non-numeric (vectorized checks then fall back
+        to the scalar path)."""
+        if slot in self._index:
+            gi = self._index[slot]
+            vals = self.genes[gi].choices
+            if not all(isinstance(v, (int, float)) for v in vals):
+                return None
+            return np.asarray(vals, dtype=np.float64)[vecs[:, gi]]
+        # a fixed (pinned) slot: constant column
+        base, idx = (slot[:-1].split("[") + ["0"])[:2] if "[" in slot \
+            else (slot, None)
+        if base not in self.pset.fixed:
+            return None
+        v = self.pset.fixed[base]
+        if idx is not None:
+            v = v[int(idx)]
+        if not isinstance(v, (int, float)):
+            return None
+        return np.full(vecs.shape[0], float(v))
+
+    def constraint_mask(self, vecs: np.ndarray, c: Constraint) -> np.ndarray:
+        """Vectorized ``_check`` over an (n, n_genes) index matrix: True per
+        row where the constraint holds.  product/sum constraints over
+        numeric slots run as column arithmetic; predicate constraints (and
+        non-numeric slots) fall back to per-row decode + scalar check."""
+        n = vecs.shape[0]
+        if c.kind != "predicate":
+            cols = [self._slot_column(vecs, s)
+                    for s in self.pset.expand_constraint_params(c)]
+            target = self._slot_column(vecs, c.target) \
+                if isinstance(c.target, str) else np.full(n, float(c.target))
+            if target is not None and all(col is not None for col in cols):
+                stacked = np.stack(cols) if cols else np.zeros((0, n))
+                if c.kind == "sum_le":
+                    return stacked.sum(axis=0) <= target
+                prod = stacked.prod(axis=0) if cols else np.ones(n)
+                if c.kind == "product_eq":
+                    return prod == target
+                if c.kind == "product_le":
+                    return prod <= target
+                raise ValueError(c.kind)
+        return np.array([self._check(cfg, c)
+                         for cfg in self.decode_batch(vecs)], dtype=bool)
+
+    def valid_mask(self, vecs: np.ndarray) -> np.ndarray:
+        """Row-wise ``is_valid`` over an (n, n_genes) index matrix."""
+        mask = np.ones(vecs.shape[0], dtype=bool)
+        for c in self.pset.constraints:
+            mask &= self.constraint_mask(vecs, c)
+        return mask
+
+    def sample_batch(self, n: int,
+                     rng: np.random.Generator) -> list[dict[str, Any]]:
+        """n valid samples, vectorized where it counts — drawing a 10^5
+        screening pool must not dominate a search generation.
+
+        Seed policy (documented + pinned by test): the raw decodes come
+        from ONE broadcast integer block that consumes the rng exactly like
+        n repeated scalar ``sample`` raw draws; a row whose raw decode
+        already satisfies every constraint is returned as-is — so over a
+        constraint-free space ``sample_batch(n, rng)`` is bit-identical to
+        ``[space.sample(rng) for _ in range(n)]``.  Rows that need work go
+        through ``sample``'s own repair-then-resample path per row (in row
+        order, after the block), so constrained spaces stay deterministic
+        per (seed, n) but diverge from the interleaved scalar stream."""
+        vecs = self.raw_decode_batch(n, rng)
+        mask = self.valid_mask(vecs)
+        out: list[dict[str, Any] | None] = [None] * n
+        if mask.any():
+            decoded = self.decode_batch(vecs[mask])
+            for j, i in enumerate(np.flatnonzero(mask)):
+                out[i] = decoded[j]
+        for i in np.flatnonzero(~mask):
+            cfg = self.repair(self.decode(vecs[i]), rng)
+            out[i] = cfg if self.is_valid(cfg) else self.sample(rng)
+        return out  # type: ignore[return-value]
+
     # -- sampling / repair ---------------------------------------------------
     def sample(self, rng: np.random.Generator, max_tries: int = 512) -> dict[str, Any]:
         """Uniform valid sample: rejection + constraint-aware repair.
@@ -143,14 +272,10 @@ class DesignSpace:
         repair) — the satisfiability probe ``repro.core.analysis.lint_pset``
         uses to tell an unsatisfiable constraint (rate 1.0) from one the
         repair path merely has to work at."""
-        counts: dict[str, int] = {c.describe(): 0
-                                  for c in self.pset.constraints}
-        for _ in range(tries):
-            vec = [int(rng.integers(len(g.choices))) for g in self.genes]
-            config = self.decode(vec)
-            for c in self.pset.constraints:
-                if not self._check(config, c):
-                    counts[c.describe()] += 1
+        vecs = self.raw_decode_batch(tries, rng)  # stream-identical to the
+        counts: dict[str, int] = {}               # old scalar probe loop
+        for c in self.pset.constraints:
+            counts[c.describe()] = int(tries - self.constraint_mask(vecs, c).sum())
         return {name: n / max(tries, 1) for name, n in counts.items()}
 
     def repair(self, config: dict[str, Any], rng: np.random.Generator,

@@ -32,7 +32,7 @@ from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Any, Callable, Mapping
 
-from repro.core.agents.base import KNOWN_AGENTS
+from repro.core.agents.base import AGENT_HYPER, KNOWN_AGENTS
 from repro.core.backends import BACKEND_REGISTRY
 from repro.core.dse import SearchResult, run_search
 from repro.core.psa import ParameterSet, paper_psa
@@ -80,6 +80,12 @@ class AgentSpec:
         else:
             object.__setattr__(self, "hyper",
                                tuple(sorted(tuple(kv) for kv in self.hyper)))
+        bad = sorted(set(k for k, _ in self.hyper) - AGENT_HYPER[self.kind])
+        if bad:
+            raise ValueError(
+                f"unknown hyper {bad} for agent kind {self.kind!r}; "
+                f"known: {sorted(AGENT_HYPER[self.kind])} — a typo here "
+                f"would otherwise TypeError a cell deep into the campaign")
 
     @classmethod
     def coerce(cls, v: "str | Mapping | AgentSpec") -> "AgentSpec":
@@ -557,6 +563,14 @@ def run_study(spec: StudySpec, *, out: "str | Path | None" = None,
         preloaded = persist.preload(env)
         say(f"eval store {persist.path}: preloaded {preloaded} "
             f"evaluation(s) [{persist.signature}]")
+    # warm-start corpus for surrogate agents: built ONCE per campaign from
+    # the store's in-memory entries (the JSONL was already read exactly
+    # once, in the PersistentEvalStore constructor) and shared by every
+    # cell — so all cells see the same corpus regardless of cell order,
+    # and no cell re-reads the file
+    warm_records = [
+        ({k: _freeze(v) for k, v in cfg.items()}, ev.reward)
+        for cfg, ev in persist.entries] if persist is not None else []
     outcomes: list[CellOutcome] = []
     persisted = 0
     t0 = time.time()
@@ -602,7 +616,9 @@ def run_study(spec: StudySpec, *, out: "str | Path | None" = None,
                 res = run_search(pset, env, aspec.kind,
                                  steps=aspec.steps or spec.steps, seed=seed,
                                  batch_size=spec.batch_size,
-                                 workers=spec.workers, **dict(aspec.hyper))
+                                 workers=spec.workers,
+                                 warm_start=warm_records,
+                                 **dict(aspec.hyper))
                 cell = CellOutcome(cell_id, aspec.kind, seed, res,
                                    store_hits=env.store_hits - h0,
                                    store_misses=env.store_misses - m0)

@@ -5,6 +5,7 @@
     python -m repro.dse lint study.json
     python -m repro.dse analyze results.jsonl
     python -m repro.dse compare a.results.jsonl b.results.jsonl
+    python -m repro.dse store stats evals.jsonl
     python -m repro.dse list-scenarios
     python -m repro.dse list-systems
     python -m repro.dse list-objectives
@@ -21,8 +22,10 @@ design point's scheduling plan verifies — plus campaign shape/cost
 recorded cell's best design point and prints its critical-path bottleneck
 attribution (compute vs collective vs xfer vs gate).  ``compare`` prints a
 per-cell best-reward table over two results files and a one-line winner
-summary.  The ``list-*`` commands enumerate the registries a spec's names
-resolve through.
+summary.  ``store stats`` inventories a persistent eval store: records,
+valid counts, and reward spread per ``eval_signature()`` — the corpus a
+surrogate agent warm-starts from.  The ``list-*`` commands enumerate the
+registries a spec's names resolve through.
 """
 from __future__ import annotations
 
@@ -252,6 +255,52 @@ def _cmd_analyze(args: argparse.Namespace) -> int:
     return 0
 
 
+def _cmd_store_stats(args: argparse.Namespace) -> int:
+    """Per-signature inventory of a persistent eval store: how much corpus
+    each ``eval_signature()`` has accumulated (the surrogate layer's
+    warm-start budget) and its reward spread.  Tolerates a torn tail —
+    the store is append-only and a killed campaign may leave one."""
+    import statistics
+
+    from repro.core.study import iter_jsonl_lenient
+
+    path = Path(args.store)
+    try:
+        if not path.exists():
+            raise OSError(f"eval store {path} does not exist")
+        per: dict[str, dict] = {}
+        for rec in iter_jsonl_lenient(path):
+            sig = rec.get("sig")
+            if not isinstance(rec.get("config"), dict) \
+                    or "reward" not in rec or not isinstance(sig, str):
+                continue
+            d = per.setdefault(sig, {"n": 0, "valid": 0, "rewards": []})
+            d["n"] += 1
+            d["valid"] += bool(rec.get("valid"))
+            d["rewards"].append(float(rec["reward"]))
+        if not per:
+            raise ValueError(f"{path} holds no eval records")
+    except (OSError, ValueError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    cols = ("signature", "records", "valid", "reward_min", "reward_median",
+            "reward_max")
+    rows = []
+    for sig in sorted(per, key=lambda s: -per[s]["n"]):
+        d = per[sig]
+        rows.append((sig, str(d["n"]), str(d["valid"]),
+                     f"{min(d['rewards']):.6g}",
+                     f"{statistics.median(d['rewards']):.6g}",
+                     f"{max(d['rewards']):.6g}"))
+    widths = [max(len(str(r[i])) for r in [cols, *rows])
+              for i in range(len(cols))]
+    for r in [cols, *rows]:
+        print("  ".join(f"{str(v):<{w}}" for v, w in zip(r, widths)).rstrip())
+    print(f"total: {sum(d['n'] for d in per.values())} record(s) across "
+          f"{len(per)} signature(s) in {path}")
+    return 0
+
+
 def _cmd_list_scenarios(args: argparse.Namespace) -> int:
     from repro.core.scenario import list_scenarios
 
@@ -334,6 +383,15 @@ def main(argv: list[str] | None = None) -> int:
     cmp_p.add_argument("a", help="first results .jsonl")
     cmp_p.add_argument("b", help="second results .jsonl")
     cmp_p.set_defaults(fn=_cmd_compare)
+
+    store_p = sub.add_parser(
+        "store", help="inspect a persistent eval store (JSONL)")
+    store_sub = store_p.add_subparsers(dest="action", required=True)
+    stats_p = store_sub.add_parser(
+        "stats", help="per-signature record counts and reward spread")
+    stats_p.add_argument("store", help="eval store .jsonl "
+                                       "(a StudySpec's eval_store_path)")
+    stats_p.set_defaults(fn=_cmd_store_stats)
 
     sub.add_parser("list-scenarios",
                    help="registered scenario kinds").set_defaults(

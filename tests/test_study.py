@@ -42,7 +42,7 @@ def test_studyspec_json_roundtrip():
         scenario_params={"n_requests": 16, "seq": 1024, "decode_tokens": 8,
                          "rate_rps": 4.0, "prompt_len_range": [256, 512]},
         objective="goodput",
-        agents=("ga", {"kind": "bo", "steps": 10, "hyper": {"pool": 24}}),
+        agents=("ga", {"kind": "bo", "steps": 10, "hyper": {"candidates": 24}}),
         seeds=[0, 1], stacks=["workload", "scenario"],
         psa_overrides={"chunks": 2})
     text = spec.to_json()
@@ -51,7 +51,8 @@ def test_studyspec_json_roundtrip():
     assert back.spec_hash() == spec.spec_hash()
     # lists arriving from JSON were canonicalized to tuples
     assert back.scenario_params["prompt_len_range"] == (256, 512)
-    assert back.agents[1] == AgentSpec("bo", steps=10, hyper={"pool": 24})
+    assert back.agents[1] == AgentSpec("bo", steps=10,
+                                       hyper={"candidates": 24})
     # a changed field changes the hash...
     assert _train_spec(steps=21).spec_hash() != _train_spec().spec_hash()
     # ...except workers, which only parallelizes evaluation (results are
@@ -70,6 +71,10 @@ def test_studyspec_rejects_bad_names_at_spec_time():
         _train_spec(objective="not-an-objective")
     with pytest.raises(ValueError, match="unknown agent kind"):
         _train_spec(agents=("sgd",))
+    with pytest.raises(ValueError, match="unknown hyper"):
+        # a typo'd hyper name must fail at spec time, not TypeError a cell
+        # deep into the campaign
+        _train_spec(agents=({"kind": "bo", "hyper": {"pool": 24}},))
     with pytest.raises(ValueError, match="streaming"):
         _train_spec(objective="goodput")  # train can't stream
     with pytest.raises(ValueError, match="unknown pinned parameter"):

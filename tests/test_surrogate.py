@@ -1,0 +1,408 @@
+"""Surrogate subsystem tests: featurization stability + loud signature
+mismatch, predictor determinism + fidelity machinery, DesignSpace batch
+sampling (pinned equivalence with the scalar path), the screening agent
+(determinism, warm start, campaign resume bit-reproducibility), the
+once-per-campaign store preload, and the ``store stats`` CLI."""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.dse import run_search
+from repro.core.psa import Constraint, Parameter, ParameterSet, paper_psa
+from repro.core.space import DesignSpace
+from repro.core.surrogate import (SURROGATE_REGISTRY, Featurizer,
+                                  build_dataset, env_store_records,
+                                  holdout_fidelity, make_surrogate, spearman,
+                                  store_records)
+from repro.core.study import StudySpec, run_study
+from repro.core.systems import system_env, system_pset
+
+ARCH = "qwen2-1.5b"
+
+
+def _env(**kw):
+    return system_env(ARCH, "system2", batch=64, seq=2048, **kw)
+
+
+def _pset():
+    return system_pset("system2")
+
+
+# ---------------------------------------------------------------------------
+# (a) featurization: round trip, stability, loud mismatch
+# ---------------------------------------------------------------------------
+
+def test_featurizer_vec_and_config_paths_agree():
+    space = DesignSpace(paper_psa(1024))
+    feat = Featurizer(space)
+    rng = np.random.default_rng(0)
+    cfgs = space.sample_batch(32, rng)
+    vecs = np.array([space.encode(c) for c in cfgs])
+    assert np.array_equal(feat.featurize_configs(cfgs),
+                          feat.featurize_vecs(vecs))
+    # same config -> same vector, across independent Featurizers
+    feat2 = Featurizer(DesignSpace(paper_psa(1024)))
+    assert feat2.signature == feat.signature
+    assert np.array_equal(feat2.featurize(cfgs[0]), feat.featurize(cfgs[0]))
+
+
+def test_featurizer_signature_stable_across_processes():
+    import os
+
+    import repro.core
+
+    space = DesignSpace(paper_psa(1024))
+    sig = Featurizer(space).signature
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(
+        Path(repro.core.__file__).resolve().parent.parent.parent) + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    out = subprocess.run(
+        env=env,
+        args=[sys.executable, "-c",
+         "from repro.core.psa import paper_psa\n"
+         "from repro.core.space import DesignSpace\n"
+         "from repro.core.surrogate import Featurizer\n"
+         "print(Featurizer(DesignSpace(paper_psa(1024))).signature)"],
+        capture_output=True, text=True, check=True)
+    assert out.stdout.strip() == sig
+
+
+def test_featurizer_signature_mismatch_is_loud():
+    space = DesignSpace(paper_psa(1024))
+    sig = Featurizer(space).signature
+    # same pset -> accepted; different pset -> refused with both signatures
+    Featurizer(space, expect_signature=sig)
+    other = DesignSpace(paper_psa(512))
+    with pytest.raises(ValueError, match="feature-signature mismatch"):
+        Featurizer(other, expect_signature=sig)
+
+
+def test_featurizer_rejects_foreign_config():
+    space = DesignSpace(paper_psa(1024))
+    feat = Featurizer(space)
+    cfg = space.sample(np.random.default_rng(0))
+    cfg["dp"] = 3  # not a choice of the dp parameter
+    with pytest.raises(ValueError, match="cannot be featurized"):
+        feat.featurize(cfg)
+
+
+def test_featurizer_encodings():
+    pset = ParameterSet([
+        Parameter("deg", "workload", (1, 2, 4, 8, 16)),   # wide -> log2
+        Parameter("frac", "workload", (0.25, 0.5, 0.75)),  # narrow -> linear
+        Parameter("algo", "collective", ("ring", "direct")),  # -> one-hot
+        Parameter("pin", "network", (7,)),       # single choice -> no width
+    ])
+    feat = Featurizer(DesignSpace(pset))
+    assert feat.n_features == 1 + 1 + 2
+    v1 = feat.featurize({"deg": 1, "frac": 0.25, "algo": "ring", "pin": 7})
+    v2 = feat.featurize({"deg": 16, "frac": 0.75, "algo": "direct", "pin": 7})
+    assert v1.tolist() == [0.0, 0.0, 1.0, 0.0]
+    assert v2.tolist() == [1.0, 1.0, 0.0, 1.0]
+    # log scaling: 4 is the geometric midpoint of 1..16
+    vm = feat.featurize({"deg": 4, "frac": 0.5, "algo": "ring", "pin": 7})
+    assert vm[0] == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# (b) predictors: determinism, fidelity machinery
+# ---------------------------------------------------------------------------
+
+def _toy_corpus(n=200, seed=0):
+    space = DesignSpace(paper_psa(1024))
+    feat = Featurizer(space)
+    rng = np.random.default_rng(seed)
+    X = feat.featurize_vecs(space.raw_decode_batch(n, rng))
+    w = np.random.default_rng(1).normal(size=X.shape[1])
+    return X, np.exp(X @ w * 0.5)
+
+
+@pytest.mark.parametrize("name", sorted(SURROGATE_REGISTRY))
+def test_predictor_deterministic_under_seed(name):
+    X, y = _toy_corpus()
+    m1 = make_surrogate(name, seed=3).fit(X, y)
+    m2 = make_surrogate(name, seed=3).fit(X, y)
+    p1, s1 = m1.predict(X[:40])
+    p2, s2 = m2.predict(X[:40])
+    assert np.array_equal(p1, p2) and np.array_equal(s1, s2)
+    assert np.all(s1 >= 0)
+
+
+@pytest.mark.parametrize("name", sorted(SURROGATE_REGISTRY))
+def test_predictor_learns_smooth_target(name):
+    X, y = _toy_corpus(400)
+    rep = holdout_fidelity(name, X, y, seed=0)
+    assert rep["spearman"] > 0.6
+    assert 0.0 <= rep["topk_recall"] <= 1.0
+
+
+def test_make_surrogate_unknown_name():
+    with pytest.raises(ValueError, match="unknown surrogate"):
+        make_surrogate("forest")
+
+
+def test_spearman():
+    a = np.array([1.0, 2.0, 3.0, 4.0])
+    assert spearman(a, a * 10) == pytest.approx(1.0)
+    assert spearman(a, -a) == pytest.approx(-1.0)
+    # ties: rank-averaged, monotone-invariant
+    b = np.array([1.0, 1.0, 2.0, 3.0])
+    assert spearman(b, b ** 3) == pytest.approx(1.0)
+    assert np.isnan(spearman(a[:1], a[:1]))
+
+
+def test_dataset_builders():
+    space = DesignSpace(paper_psa(1024))
+    feat = Featurizer(space)
+    rng = np.random.default_rng(0)
+    cfgs = space.sample_batch(8, rng)
+    env = _env(eval_store={})
+    evs = env.step_batch(cfgs)
+    recs = env.store_records()
+    assert len(recs) == len({tuple(sorted(c.items())) for c in cfgs})
+    rewards = {tuple(sorted(c.items())): ev.reward
+               for c, ev in zip(cfgs, evs)}
+    for cfg, r in recs:
+        assert rewards[tuple(sorted(cfg.items()))] == r
+    # env_store_records parses the shared-store key shape directly
+    assert sorted(r for _, r in env_store_records(env.eval_store)) == \
+        sorted(r for _, r in recs)
+    ds = build_dataset(feat, recs)
+    assert ds.X.shape == (len(recs), feat.n_features)
+    assert ds.feature_signature == feat.signature
+
+
+# ---------------------------------------------------------------------------
+# (c) DesignSpace batch sampling — the satellite's pinned equivalences
+# ---------------------------------------------------------------------------
+
+def test_sample_batch_bit_identical_to_scalar_on_constraint_free_space():
+    pset = ParameterSet([
+        Parameter("a", "workload", (1, 2, 4, 8)),
+        Parameter("b", "workload", ("x", "y", "z")),
+        Parameter("c", "workload", (0.1, 0.2)),
+    ])
+    space = DesignSpace(pset)
+    ra, rb = np.random.default_rng(42), np.random.default_rng(42)
+    assert space.sample_batch(50, ra) == [space.sample(rb) for _ in range(50)]
+
+
+def test_sample_batch_valid_and_deterministic_on_constrained_space():
+    space = DesignSpace(paper_psa(1024))
+    a = space.sample_batch(64, np.random.default_rng(7))
+    b = space.sample_batch(64, np.random.default_rng(7))
+    assert a == b
+    assert all(space.is_valid(c) for c in a)
+
+
+def test_decode_batch_matches_scalar_decode():
+    space = DesignSpace(paper_psa(1024))
+    vecs = space.raw_decode_batch(32, np.random.default_rng(3))
+    batch = space.decode_batch(vecs)
+    for row, cfg in zip(vecs, batch):
+        scalar = space.decode(row)
+        assert cfg == scalar
+        assert all(type(cfg[k]) is type(scalar[k]) for k in cfg)
+
+
+def test_valid_mask_matches_scalar_is_valid():
+    space = DesignSpace(paper_psa(1024))
+    vecs = space.raw_decode_batch(128, np.random.default_rng(5))
+    mask = space.valid_mask(vecs)
+    for row, ok in zip(vecs, mask):
+        assert bool(ok) == space.is_valid(space.decode(row))
+
+
+def test_constraint_mask_predicate_fallback():
+    pset = ParameterSet(
+        [Parameter("a", "workload", (1, 2, 4)),
+         Parameter("b", "workload", (1, 2, 4))],
+        [Constraint(kind="predicate", params=("a", "b"),
+                    fn=lambda cfg: cfg["a"] <= cfg["b"], name="a<=b")])
+    space = DesignSpace(pset)
+    vecs = space.raw_decode_batch(64, np.random.default_rng(0))
+    mask = space.constraint_mask(vecs, pset.constraints[0])
+    for row, ok in zip(vecs, mask):
+        cfg = space.decode(row)
+        assert bool(ok) == (cfg["a"] <= cfg["b"])
+
+
+# ---------------------------------------------------------------------------
+# (d) screening agent: determinism, warm start, resume reproducibility
+# ---------------------------------------------------------------------------
+
+def _search(seed=0, steps=48, **kw):
+    return run_search(_pset(), _env(), "surrogate", steps=steps, seed=seed,
+                      batch_size=8, warmup=8, pool=256, **kw)
+
+
+def test_surrogate_agent_deterministic():
+    r1, r2 = _search(seed=5), _search(seed=5)
+    assert r1.best_reward == r2.best_reward
+    assert r1.reward_curve == r2.reward_curve
+    assert r1.best_config == r2.best_config
+
+
+def test_surrogate_agent_proposals_valid_and_screened():
+    from repro.core.agents.surrogate import SurrogateScreeningAgent
+
+    space = DesignSpace(_pset())
+    agent = SurrogateScreeningAgent(space, seed=0, warmup=8, pool=256)
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        batch = agent.propose_batch(8)
+        assert all(space.is_valid(c) for c in batch)
+        agent.observe_batch(batch, [float(rng.random()) for _ in batch])
+    assert agent._model is not None  # screening path engaged after warmup
+    # post-warmup proposals dedupe against everything already observed
+    seen = {tuple(sorted(c.items())) for c in agent._cfgs}
+    batch = agent.propose_batch(8)
+    assert all(tuple(sorted(c.items())) not in seen for c in batch)
+
+
+def test_surrogate_warm_start_pinned(tmp_path):
+    # corpus from a real prior search, persisted through the JSONL store
+    # shape, then warm-starting a new search from the file's records
+    spec = StudySpec(
+        name="warm", arch=ARCH, system="system2", scenario="train",
+        scenario_params={"batch": 64, "seq": 2048}, objective="perf_per_bw",
+        agents=("ga",), seeds=(0,), steps=24, batch_size=8,
+        eval_store_path=str(tmp_path / "evals.jsonl"))
+    run_study(spec, out=tmp_path / "r1.jsonl")
+    recs = store_records(tmp_path / "evals.jsonl", spec.eval_signature())
+    assert len(recs) > 0
+    res = _search(warm_start=recs)
+    assert res.warm_start_points == len(recs)
+    cold = _search()
+    assert cold.warm_start_points == 0
+    # pinned: the warm agent's proposals diverge from cold immediately
+    # (the corpus skips the random warmup), and the run stays deterministic
+    res2 = _search(warm_start=recs)
+    assert res.reward_curve == res2.reward_curve
+    assert res.best_config == res2.best_config
+
+
+def test_surrogate_study_resume_bit_reproducible(tmp_path):
+    def spec(store):
+        return StudySpec(
+            name="s", arch=ARCH, system="system2", scenario="train",
+            scenario_params={"batch": 64, "seq": 2048},
+            objective="perf_per_bw",
+            agents=({"kind": "surrogate",
+                     "hyper": {"warmup": 8, "pool": 256}},),
+            seeds=(0, 1), steps=24, batch_size=8,
+            eval_store_path=str(store))
+
+    def rows(path):
+        out = []
+        for line in Path(path).read_text().splitlines():
+            rec = json.loads(line)
+            if rec.get("record") != "cell":
+                continue
+            r = dict(rec["result"])
+            for k in ("wall_s", "points_per_s"):
+                r.pop(k, None)
+            out.append((rec["cell_id"], r))
+        return out
+
+    a = run_study(spec(tmp_path / "ea.jsonl"), out=tmp_path / "a.jsonl")
+    assert [o.resumed for o in a.outcomes] == [False, False]
+    # an identical fresh campaign is bit-identical cell for cell
+    b = run_study(spec(tmp_path / "eb.jsonl"), out=tmp_path / "b.jsonl")
+    assert rows(tmp_path / "a.jsonl") == rows(tmp_path / "b.jsonl")
+    # resuming the finished campaign re-runs nothing and changes nothing
+    before = rows(tmp_path / "a.jsonl")
+    c = run_study(spec(tmp_path / "ea.jsonl"), out=tmp_path / "a.jsonl",
+                  resume=True)
+    assert [o.resumed for o in c.outcomes] == [True, True]
+    assert rows(tmp_path / "a.jsonl") == before
+
+
+def test_surrogate_in_agent_registry():
+    from repro.core.agents import KNOWN_AGENTS, make_agent
+
+    assert "surrogate" in KNOWN_AGENTS
+    agent = make_agent("surrogate", DesignSpace(paper_psa(1024)), seed=0)
+    assert agent.name == "surrogate"
+
+
+# ---------------------------------------------------------------------------
+# (e) once-per-campaign store preload (regression for the per-cell re-read)
+# ---------------------------------------------------------------------------
+
+def test_persistent_store_read_once_per_campaign(tmp_path, monkeypatch):
+    import repro.core.study as study_mod
+
+    store = tmp_path / "evals.jsonl"
+    spec = StudySpec(
+        name="pre", arch=ARCH, system="system2", scenario="train",
+        scenario_params={"batch": 64, "seq": 2048}, objective="perf_per_bw",
+        agents=("rw", "ga", {"kind": "surrogate",
+                             "hyper": {"warmup": 8, "pool": 256}}),
+        seeds=(0,), steps=16, batch_size=8, eval_store_path=str(store))
+    run_study(spec, out=tmp_path / "r1.jsonl")   # populate the store
+
+    reads = []
+    orig = study_mod.iter_jsonl_lenient
+
+    def counting(path):
+        if Path(path) == store:
+            reads.append(path)
+        return orig(path)
+
+    monkeypatch.setattr(study_mod, "iter_jsonl_lenient", counting)
+    res = run_study(spec, out=tmp_path / "r2.jsonl")
+    # 3 cells, 1 store: the JSONL is parsed exactly once per campaign and
+    # every cell (incl. the surrogate's warm start) feeds off the
+    # in-memory entries
+    assert len(res.outcomes) == 3
+    assert len(reads) == 1
+    assert res.store_preloaded > 0
+
+
+def test_store_records_reader(tmp_path):
+    p = tmp_path / "evals.jsonl"
+    recs = [{"sig": "A", "config": {"x": 1, "t": [1, 2]}, "reward": 2.0,
+             "latency_ms": 1.0, "valid": True, "detail": {}},
+            {"sig": "B", "config": {"x": 2}, "reward": 3.0,
+             "latency_ms": 1.0, "valid": True, "detail": {}}]
+    p.write_text("\n".join(json.dumps(r) for r in recs)
+                 + "\n{\"torn", encoding="utf-8")
+    both = store_records(p)
+    assert len(both) == 2
+    only_a = store_records(p, "A")
+    assert only_a == [({"x": 1, "t": (1, 2)}, 2.0)]  # lists re-frozen
+    with pytest.raises(FileNotFoundError):
+        store_records(tmp_path / "missing.jsonl")
+
+
+# ---------------------------------------------------------------------------
+# (f) store stats CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_store_stats(tmp_path, capsys):
+    from repro.dse import main
+
+    p = tmp_path / "evals.jsonl"
+    lines = [json.dumps({"sig": "AA", "config": {"x": i}, "reward": float(i),
+                         "latency_ms": 1.0, "valid": i > 0, "detail": {}})
+             for i in range(5)]
+    lines.append(json.dumps({"sig": "BB", "config": {"x": 9}, "reward": 9.0,
+                             "latency_ms": 1.0, "valid": True, "detail": {}}))
+    p.write_text("\n".join(lines) + '\n{"torn tail', encoding="utf-8")
+    assert main(["store", "stats", str(p)]) == 0
+    out = capsys.readouterr().out
+    assert "AA" in out and "BB" in out
+    assert "6 record(s) across 2 signature(s)" in out
+    # exit-2 discipline: missing and empty files
+    assert main(["store", "stats", str(tmp_path / "nope.jsonl")]) == 2
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("", encoding="utf-8")
+    assert main(["store", "stats", str(empty)]) == 2
